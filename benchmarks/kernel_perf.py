@@ -1,0 +1,57 @@
+"""Kernel/backend micro-benchmarks: us_per_call for each integer-matmul
+backend on CPU, plus structural cost (vector-op counts) for the TPU model.
+Wall-times here are CPU reference numbers; the TPU roofline for the kernels
+is derived in benchmarks/roofline.py from the dry-run artifacts."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant.quantize import QuantConfig
+from repro.quant import matmul as QM
+
+
+def _time(fn, *args, reps=5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps * 1e6
+
+
+def run(quick: bool = True) -> List[Dict]:
+    rng = np.random.default_rng(0)
+    m = k = n = 256 if quick else 512
+    x = jnp.asarray(rng.integers(-127, 128, (m, k)).astype(np.int8))
+    w = jnp.asarray(rng.integers(-127, 128, (k, n)).astype(np.int8))
+    rows = []
+    backends = {
+        "int8_exact": lambda: QM.int8_matmul(x, w),
+        "approx_lut": lambda: QM.approx_matmul_lut(
+            x, w, QuantConfig(backend="approx_lut")),
+        "approx_deficit": lambda: QM.approx_matmul_deficit(
+            x, w, QuantConfig(backend="approx_deficit")),
+        "approx_stage1": lambda: QM.approx_matmul_stage1(
+            x, w, QuantConfig(backend="approx_stage1")),
+    }
+    base = None
+    for name, fn in backends.items():
+        jfn = jax.jit(fn)
+        us = _time(lambda: jfn())
+        if base is None:
+            base = us
+        rows.append({"backend": name, "m": m, "k": k, "n": n,
+                     "us_per_call": us, "slowdown_vs_exact": us / base})
+        print(f"kernel_perf: {name:16s} {us:10.1f} us  "
+              f"({us / base:6.1f}x exact)  [{m}x{k}x{n} int8]")
+    # structural cost of the deficit kernel (ops per element, TPU model)
+    rows.append({"backend": "deficit_ops_per_elem", "m": 0, "k": 0, "n": 0,
+                 "us_per_call": 0.0, "slowdown_vs_exact": 0.0,
+                 "note": "~60 VPU bit-ops/elem vs 1 MXU MAC; stage1 = "
+                         "8 MXU matmuls total"})
+    return rows

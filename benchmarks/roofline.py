@@ -1,0 +1,175 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) cell on the single-pod mesh:
+  compute term    = HLO_FLOPs_per_device / peak_FLOPs          (197 TF bf16)
+  memory term     = HLO_bytes_per_device / HBM_bw              (819 GB/s)
+  collective term = collective_bytes_per_device / ICI_bw       (50 GB/s/link)
+  MODEL_FLOPS     = 6*N*D (train) or 2*N_active*D (fwd) per device
+  useful ratio    = MODEL_FLOPS / HLO_FLOPs   (remat/redundancy waste)
+
+Conventions: cost_analysis() and post-SPMD HLO shapes are per-device, so all
+three terms are per-chip seconds (the spec's global-bytes / (chips x bw)).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.configs import registry
+from repro.launch.mesh import PEAK_FLOPS_BF16, HBM_BW, ICI_BW
+
+DRY = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+
+
+def model_params(arch: str):
+    """(total params, active params) from the config (excl. embeddings for
+    the FLOP model, incl. for memory)."""
+    from repro.models.transformer_lm import descs
+    from repro.nn import module as M
+    cfg = registry.get(arch)
+    tree = descs(cfg)
+    total = M.n_params(tree)
+    if not cfg.n_experts:
+        return total, total
+    # expert params count once per top_k/E activation
+    expert = 0
+    blocks = tree["blocks"]
+    for b in blocks:
+        for lname, layer in b.items():
+            if "moe" in layer:
+                for k in ("w1", "w2", "w3"):
+                    d = layer["moe"][k]
+                    n = 1
+                    for s in d.shape:
+                        n *= s
+                    expert += n
+    active = total - expert + expert * cfg.top_k / cfg.n_experts
+    return total, int(active)
+
+
+def tokens_per_device(rec, mesh_devices: int) -> float:
+    seq, batch, kind = registry.SHAPES[rec["shape"]]
+    if kind in ("train", "prefill"):
+        return batch * seq / mesh_devices
+    return batch / mesh_devices          # decode: one token per sequence
+
+
+def attention_model_flops(arch: str, shape: str, devices: int) -> float:
+    """Model (useful) attention FLOPs per device: 2*2*B*H*Sq*Sk_eff*Dh per
+    layer forward (x3 with backward), causal halving, window clipping."""
+    cfg = registry.get(arch)
+    seq, batch, kind = registry.SHAPES[shape]
+    if cfg.ssm == "rwkv6":
+        # linear attention: state update ~ 2*B*S*H*N^2 per layer
+        n = cfg.d_model // cfg.n_heads
+        per_layer = 4.0 * batch * seq * cfg.n_heads * n * n
+        mult = 3.0 if kind == "train" else 1.0
+        if kind == "decode":
+            per_layer = 4.0 * batch * cfg.n_heads * n * n
+        return mult * cfg.n_layers * per_layer / devices
+    h = cfg.n_heads
+    dh = cfg.dh
+    sq = seq if kind in ("train", "prefill") else 1
+    flops = 0.0
+    for rep, kinds in cfg.blocks():
+        for k in kinds:
+            w = cfg.local_window if k in ("local", "hymba") else 0
+            if k == "cross":
+                sk_eff = cfg.enc_len
+                cl = 1.0
+            else:
+                sk_eff = min(w, seq) if w else seq
+                cl = 0.5 if kind != "decode" and not w else 1.0
+            flops += rep * 4.0 * batch * h * sq * sk_eff * dh * cl
+    mult = 3.0 if kind == "train" else 1.0
+    return mult * flops / devices
+
+
+def analyze(mesh: str = "16x16") -> List[Dict]:
+    devices = 256 if mesh == "16x16" else 512
+    rows = []
+    cache = {}
+    for f in sorted(DRY.glob(f"*_{mesh}.json")):
+        rec = json.loads(f.read_text())
+        arch = rec["arch"]
+        if arch not in cache:
+            cache[arch] = model_params(arch)
+        total, active = cache[arch]
+        flops = rec["flops_per_device"]
+        f_i8 = rec.get("flops_int8_per_device", 0.0)
+        mem_bytes = rec["bytes_per_device"]
+        coll = sum(rec["collective_bytes_per_device"].values())
+        # int8 dots run at 2x the bf16 MXU rate on v5e
+        t_c = (flops - f_i8) / PEAK_FLOPS_BF16 + f_i8 / (2 * PEAK_FLOPS_BF16)
+        t_m = mem_bytes / HBM_BW
+        # TPU-fusion-adjusted lower bound: only matmul/conv io + collective
+        # traffic round-trips HBM (elementwise chains fuse into them)
+        t_m_opt = (rec.get("bytes_dots_per_device", mem_bytes)
+                   + 2 * coll) / HBM_BW
+        t_x = coll / ICI_BW
+        mult = 6.0 if rec["kind"] == "train" else 2.0
+        model_flops = (mult * active * tokens_per_device(rec, devices)
+                       + attention_model_flops(arch, rec["shape"], devices))
+        dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+                  key=lambda kv: kv[1])[0]
+        bound = max(t_c, t_m, t_x)
+        rows.append({
+            "arch": arch, "shape": rec["shape"], "mesh": mesh,
+            "kind": rec["kind"],
+            "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+            "dominant": dom,
+            "model_flops_per_dev": model_flops,
+            "hlo_flops_per_dev": flops,
+            "useful_ratio": model_flops / flops if flops > 0 else 0.0,
+            # achievable fraction of compute roofline if perfectly
+            # overlapped: time is bound by the max term
+            "roofline_fraction": (model_flops / PEAK_FLOPS_BF16) / bound
+            if bound > 0 else 0.0,
+            "roofline_fraction_tpu": (model_flops / PEAK_FLOPS_BF16)
+            / max(t_c, t_m_opt, t_x) if max(t_c, t_m_opt, t_x) > 0 else 0.0,
+            "t_memory_tpu_s": t_m_opt,
+            "peak_gib": (rec["memory"]["peak_bytes"] or 0) / 2 ** 30,
+            "collectives": rec["collective_bytes_per_device"],
+        })
+    return rows
+
+
+SUGGEST = {
+    "compute": "raise useful_ratio (less remat/recompute, fuse elementwise)",
+    "memory": "fuse/reuse HBM traffic (bigger blocks, bf16 intermediates, "
+              "avoid materialized gathers)",
+    "collective": "reshard to cut all-gathers (FSDP prefetch overlap, "
+                  "2D sharding, bf16 reductions)",
+}
+
+
+def report(mesh: str = "16x16") -> str:
+    rows = analyze(mesh)
+    lines = [
+        f"### Roofline — single-pod {mesh} (per-chip seconds per step)", "",
+        "| arch | shape | t_compute | t_memory | t_collective | dominant | "
+        "useful | frac (cpu-hlo / tpu-fused) | next move |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} / "
+            f"{r['roofline_fraction_tpu']:.3f} | "
+            f"{SUGGEST[r['dominant']]} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "16x16"
+    out = report(mesh)
+    print(out)
+    p = DRY.parent / f"roofline_{mesh.replace('x', '_')}.md"
+    p.write_text(out)
+    rows = analyze(mesh)
+    (DRY.parent / f"roofline_{mesh.replace('x', '_')}.json").write_text(
+        json.dumps(rows, indent=1))

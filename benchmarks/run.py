@@ -1,0 +1,71 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV at the end, and a human report
+during the run. ``--quick`` (default) keeps CPU wall-time modest; ``--full``
+uses the paper-scale training budgets.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+OUT = Path(__file__).resolve().parent.parent / "experiments"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: table1,table2,table3,table4,table5,"
+                         "fig7,kernels")
+    args = ap.parse_args(sys.argv[1:])
+    quick = not args.full
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import tables as T
+    from benchmarks import kernel_perf as K
+
+    results = {}
+    csv = []
+
+    def bench(name, fn):
+        if only and name not in only:
+            return
+        t0 = time.time()
+        rows = fn()
+        dt = (time.time() - t0) * 1e6
+        results[name] = rows
+        derived = ""
+        if name == "table2":
+            derived = f"mred_match={rows[-1]['mred']==rows[-1]['mred_paper']}"
+        elif name == "table5":
+            accs = {r["design"]: r["acc"] for r in rows
+                    if r["model"] == "lenet5"}
+            if "approx[proposed]" in accs and "bf16" in accs:
+                derived = (f"lenet_approx_minus_exact="
+                           f"{accs['approx[proposed]'] - accs['bf16']:.2f}pp")
+        elif name == "fig7":
+            derived = f"rows={len(rows)}"
+        csv.append(f"{name},{dt:.0f},{derived}")
+
+    bench("table1", T.table1_compressor)
+    bench("table2", T.table2_error_metrics)
+    bench("table3", T.table3_compressor_hw)
+    bench("table4", T.table4_multiplier_hw)
+    bench("table5", lambda: T.table5_mnist(quick=quick))
+    bench("fig7", lambda: T.fig7_denoising(quick=quick))
+    bench("kernels", lambda: K.run(quick=quick))
+
+    OUT.mkdir(exist_ok=True)
+    (OUT / "bench_results.json").write_text(json.dumps(results, indent=1,
+                                                       default=float))
+    print("\nname,us_per_call,derived")
+    for line in csv:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

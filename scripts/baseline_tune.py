@@ -1,0 +1,55 @@
+"""Tune input perms for asymmetric baselines + design2 compensation."""
+import sys, itertools
+import numpy as np
+sys.path.insert(0, 'src')
+import repro.core.compressors as C
+import repro.core.multiplier as M
+import repro.core.metrics as X
+import dataclasses
+
+exact = X.exhaustive_exact()
+
+def eval_cfg(cfg):
+    m = X.evaluate(M.exhaustive_products(cfg), exact)
+    return m
+
+# sanity: exact structure must be exact now
+m = eval_cfg(M.exact_multiplier())
+print('exact struct:', m.row())
+
+TGT = {'design12': (68.498,0.596,3.496), 'design15': (65.425,0.673,3.531),
+       'design13': (95.681,1.565,20.276), 'design17_d2': (21.296,0.162,0.578)}
+for dsg, tgt in TGT.items():
+    best = []
+    for perm in itertools.permutations(range(4)):
+        d0 = C.DESIGNS[dsg]
+        C.DESIGNS[dsg] = dataclasses.replace(d0, input_perm=perm)
+        m = eval_cfg(M.proposed_multiplier(dsg))
+        C.DESIGNS[dsg] = d0
+        score = abs(m.er_pct-tgt[0]) + 20*abs(m.nmed_pct-tgt[1]) + 5*abs(m.mred_pct-tgt[2])
+        best.append((score, perm, m))
+    best.sort(key=lambda r: r[0])
+    s, perm, m = best[0]
+    print(f"{dsg:12s} perm={perm} ER={m.er_pct:.3f} NMED={m.nmed_pct:.3f} MRED={m.mred_pct:.3f}  want {tgt}")
+
+# design2 compensation sweep: bit placements
+print('\ndesign2 compensation variants (single-error comp), target MRED=0.715:')
+import repro.core.multiplier as MM
+src = open('src/repro/core/multiplier.py').read()
+# emulate by monkeypatching _Tree.run is messy; instead temporarily test trunc col counts and comp bits via a local function
+def design2_variant(comp_bits, trunc):
+    class T(MM._Tree):
+        def run(self, a, b):
+            import numpy as np
+            self.cfg = dataclasses.replace(self.cfg, truncate_cols=0)  # disable builtin
+            # rebuild pp manually
+            return None
+    # simpler: monkeypatch config and compensation through module-level knob
+    pass
+# simplest: edit approach — parameterize compensation in MultiplierConfig later.
+# quick numeric emulation: approx = full proposed-tree product of truncated operands? Not equivalent.
+# Do it by monkeypatching cols truncation inside a copied function: skip, use cfg.truncate_cols and custom comp pattern via globals
+for comp_pattern in ['none', 'c3', 'c2c3', 'c2', 'c3c3']:
+    MM._DESIGN2_COMP = comp_pattern
+    # patch in run via global (requires code support) -- skipping, handled after code edit
+print('(handled after code edit)')

@@ -1,0 +1,87 @@
+"""Explicit planned Dadda 8x8 with 4:2 compressors (textbook schedule).
+
+Stage1 (target 4, in-stage carries counted, LSB->MSB):
+  c4: HA | c5: C | c6: C+HA | c7: C,C | c8: C+FA | c9: C+HA | c10: C | c11: HA
+Stage2 (target 2):
+  c2: HA | c3..c12: C | c13: HA
+"""
+import sys, itertools
+import numpy as np
+sys.path.insert(0, 'src')
+
+N = 8
+A = np.arange(256, dtype=np.int64)[:, None] + np.zeros((1,256), np.int64)
+B = np.arange(256, dtype=np.int64)[None, :] + np.zeros((256,1), np.int64)
+EXACT = A * B
+
+def run(order='pp_first', s1=None, s2=None, verbose=False):
+    sites = []
+    def comp_sat(bits, col):
+        s = sum(bits); fire = (s == 4)
+        sites.append((col, float(fire.mean()*(1<<col))))
+        v = np.minimum(s, 3)
+        return v & 1, (v >> 1) & 1
+    def fa(b): x,y,z=b; return x^y^z, (x&y)|(x&z)|(y&z)
+    def ha(b): x,y=b; return x^y, x&y
+
+    cols = [[] for _ in range(16)]
+    for i in range(N):
+        for j in range(N):
+            cols[i+j].append(((A>>i)&1) & ((B>>j)&1))
+    # ---- stage 1 ----
+    plan1 = s1 or {4:['ha'],5:['c'],6:['c','ha'],7:['c','c'],8:['c','fa'],9:['c','ha'],10:['c'],11:['ha']}
+    mid = [[] for _ in range(16)]
+    for c in range(16):
+        bits = list(cols[c])
+        if order == 'carry_first':
+            bits = mid[c] + bits; mid[c] = []
+        else:
+            bits = bits + mid[c]; mid[c] = []
+        for op in plan1.get(c, []):
+            if op=='c':
+                s, cy = comp_sat(bits[:4], c); bits = bits[4:]
+            elif op=='fa':
+                s, cy = fa(bits[:3]); bits = bits[3:]
+            else:
+                s, cy = ha(bits[:2]); bits = bits[2:]
+            mid[c].append(s); mid[c+1].append(cy)
+        mid[c] = bits + mid[c] if order!='carry_first' else mid[c]+bits
+    if verbose: print('mid heights:', [len(x) for x in mid])
+    # ---- stage 2 ----
+    plan2 = s2 or {2:['ha'],**{c:['c'] for c in range(3,13)},13:['ha']}
+    out = [[] for _ in range(17)]
+    for c in range(16):
+        bits = list(mid[c])
+        if order == 'carry_first':
+            bits = out[c] + bits
+        else:
+            bits = bits + out[c]
+        out[c] = []
+        for op in plan2.get(c, []):
+            if op=='c':
+                s, cy = comp_sat(bits[:4], c); bits = bits[4:]
+            elif op=='fa':
+                s, cy = fa(bits[:3]); bits = bits[3:]
+            else:
+                s, cy = ha(bits[:2]); bits = bits[2:]
+            out[c].append(s); out[c+1].append(cy)
+        out[c] = bits + out[c]
+    if verbose: print('out heights:', [len(x) for x in out])
+    for c in range(17):
+        while len(out[c]) > 2:
+            s, cy = fa(out[c][:3]); out[c] = out[c][3:] + [s]
+            if c+1 < 17: out[c+1].append(cy)
+    total = 0
+    for c, bits in enumerate(out):
+        for b in bits:
+            total = total + (b.astype(np.int64) << c)
+    ed = np.abs(total - EXACT)
+    er = 100*(ed != 0).mean(); med = ed.mean()
+    nz = EXACT != 0
+    mred = 100*np.where(nz, ed/np.where(nz, EXACT, 1), 0).mean()
+    return er, med, 100*med/65025, mred, sites
+
+for order in ['pp_first','carry_first']:
+    er, med, nmed, mred, sites = run(order, verbose=True)
+    print(f"{order:12s} ER={er:.3f}% MED={med:.3f} NMED={nmed:.4f}% MRED={mred:.4f}%")
+    print('  site MED:', ' '.join(f"c{c}:{m:.2f}" for c, m in sites))

@@ -1,0 +1,90 @@
+"""Per-site error accounting to reverse-engineer the paper's tree.
+
+MED = sum over compressor sites of 2^c * P(all 4 inputs = 1).
+Targets: MED in [29.59, 30.24], error pairs = 4584 (ER 6.994%).
+"""
+import sys
+import numpy as np
+sys.path.insert(0, 'src')
+
+N = 8
+A = np.arange(256, dtype=np.int64)[:, None] + np.zeros((1,256), np.int64)
+B = np.arange(256, dtype=np.int64)[None, :] + np.zeros((256,1), np.int64)
+
+def pp(i, j):
+    return ((A >> i) & 1) & ((B >> j) & 1)
+
+def comp_sat(bits, col, sites, fired):
+    s = sum(bits)
+    fire = (s == 4).astype(np.int64)
+    sites.append((col, float(fire.mean()), float(fire.mean() * (1 << col))))
+    fired |= fire.astype(bool)
+    v = np.minimum(s, 3)
+    return v & 1, (v >> 1) & 1
+
+def fa(b):
+    x,y,z = b; return x^y^z, (x&y)|(x&z)|(y&z)
+def ha(b):
+    x,y = b; return x^y, x&y
+
+def build(structure):
+    """structure: dict col -> list of ops for stage1/stage2"""
+    sites, fired = [], np.zeros((256,256), bool)
+    cols = [[] for _ in range(2*N)]
+    for i in range(N):
+        for j in range(N):
+            cols[i+j].append(pp(i,j))
+    # stage 1: row-grouped, 4-high columns per group
+    mid = [[] for _ in range(2*N)]
+    for grp, rows in ((0, range(0,4)), (1, range(4,8))):
+        gcols = [[] for _ in range(2*N)]
+        for i in rows:
+            for j in range(N):
+                gcols[i+j].append(pp(i,j))
+        for c in range(2*N):
+            bits = gcols[c]
+            if len(bits) == 4:
+                s, cy = comp_sat(bits, c, sites, fired)
+                mid[c].append(s); mid[c+1].append(cy)
+            else:
+                mid[c].extend(bits)   # pass 1,2,3-high columns untouched
+    hmid = [len(x) for x in mid]
+    print("mid heights:", hmid)
+    # stage 2: compress columns with >=4, FA for 3 leftover, HA for 2 when needed
+    out = [[] for _ in range(2*N)]
+    for c in range(2*N-1):
+        bits = list(mid[c]) + out[c]; out[c] = []
+        while len(bits) >= 4:
+            s, cy = comp_sat(bits[:4], c, sites, fired); bits = bits[4:]
+            out[c].append(s); out[c+1].append(cy)
+        while len(bits) + len(out[c]) > 2 and len(bits) >= 3:
+            s, cy = fa(bits[:3]); bits = bits[3:]
+            out[c].append(s); out[c+1].append(cy)
+        while len(bits) + len(out[c]) > 2 and len(bits) == 2:
+            s, cy = ha(bits); bits = []
+            out[c].append(s); out[c+1].append(cy)
+        out[c].extend(bits)
+    # cleanup + final add
+    for c in range(2*N-1):
+        while len(out[c]) > 2:
+            s, cy = fa(out[c][:3]); out[c] = out[c][3:] + [s]; out[c+1].append(cy)
+    total = 0
+    for c, bits in enumerate(out):
+        for b in bits:
+            total = total + (b << c)
+    return total, sites, fired
+
+t, sites, fired = build(None)
+exact = A * B
+ed = np.abs(t - exact)
+print(f"\nER={100*(ed!=0).mean():.3f}%  MED={ed.mean():.3f}  NMED={100*ed.mean()/65025:.4f}%")
+nz = exact != 0
+red = np.where(nz, ed/np.where(nz, exact, 1), 0)
+print(f"MRED={100*red.mean():.4f}%   fired-pairs={int(fired.sum())} ({100*fired.mean():.3f}%)")
+print(f"\nsites ({len(sites)}):")
+s1 = [s for s in sites]
+med_total = 0
+for c, p, medc in sites:
+    med_total += medc
+    print(f"  col {c:2d}  P={p:.6f}  MED+={medc:8.3f}")
+print(f"sum of site MED contributions = {med_total:.3f}  (target ~29.9)")

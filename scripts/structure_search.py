@@ -1,0 +1,105 @@
+"""Search reduction-tree variants for the one matching paper Table 2.
+
+Target (proposed compressor, proposed structure): ER=6.994 NMED=0.046 MRED=0.109
+Also informative: design1 structure w/ single-error comp -> MRED=0.023
+                  design2 structure w/ single-error comp -> MRED=0.715
+"""
+import itertools, sys
+import numpy as np
+sys.path.insert(0, 'src')
+from repro.core import compressors as C
+from repro.core.metrics import evaluate, exhaustive_exact
+
+N = 8
+
+def pp_cols():
+    a = np.arange(256, dtype=np.int64)[:, None] + np.zeros((1,256), np.int64)
+    b = np.arange(256, dtype=np.int64)[None, :] + np.zeros((256,1), np.int64)
+    cols = [[] for _ in range(2*N-1)]
+    for i in range(N):
+        ai = (a >> i) & 1
+        for j in range(N):
+            cols[i+j].append((ai & ((b >> j) & 1), i))  # keep row index
+    return cols
+
+def comp(design, bits):
+    s, c = C.compress(design, bits[0], bits[1], bits[2], bits[3])
+    return s, c
+
+def fa(x,y,z):
+    return x^y^z, (x&y)|(x&z)|(y&z)
+
+def ha(x,y):
+    return x^y, x&y
+
+def reduce_grouped(cols, design, h3, h2, s2_h3, s2_h2, carry_pos):
+    """Stage1: rows 0-3 and 4-7 compressed independently column-wise."""
+    ncols = len(cols)+2
+    mid = [[] for _ in range(ncols)]
+    for grp in (0,1):
+        for c in range(len(cols)):
+            bits = [b for b,i in cols[c] if (i//4)==grp]
+            while len(bits) >= 4:
+                s, cy = comp(design, bits[:4]); bits = bits[4:]
+                mid[c].append(s); mid[c+1].append(cy)
+            if len(bits) == 3:
+                if h3 == 'fa':
+                    s, cy = fa(*bits); bits=[]; mid[c].append(s); mid[c+1].append(cy)
+                elif h3 == 'comp0':
+                    z = bits[0]*0
+                    s, cy = comp(design, bits+[z]); bits=[]
+                    mid[c].append(s); mid[c+1].append(cy)
+                else:
+                    mid[c].extend(bits); bits=[]
+            if len(bits) == 2:
+                if h2 == 'ha':
+                    s, cy = ha(*bits); bits=[]; mid[c].append(s); mid[c+1].append(cy)
+                else:
+                    mid[c].extend(bits); bits=[]
+            mid[c].extend(bits)
+    # stage 2
+    out = [[] for _ in range(ncols+1)]
+    for c in range(ncols):
+        bits = list(mid[c]) if carry_pos=='app' else list(reversed(mid[c]))
+        bits = [*bits, *out[c]]; out[c] = []
+        while len(bits) >= 4 and len(bits) > 2:
+            s, cy = comp(design, bits[:4]); bits = bits[4:]
+            out[c].append(s); out[c+1].append(cy)
+        if len(bits) + len(out[c]) > 2 and len(bits) == 3:
+            if s2_h3 == 'fa':
+                s, cy = fa(*bits); bits=[]
+            else:
+                z = bits[0]*0; s, cy = comp(design, bits+[z]); bits=[]
+            out[c].append(s); out[c+1].append(cy)
+        if len(bits) + len(out[c]) > 2 and len(bits) == 2:
+            if s2_h2 == 'ha':
+                s, cy = ha(*bits); bits=[]
+                out[c].append(s); out[c+1].append(cy)
+        out[c].extend(bits)
+    # possible height-3 leakage: exact FA cleanup
+    changed = True
+    while changed:
+        changed = False
+        for c in range(len(out)):
+            while len(out[c]) > 2:
+                s, cy = fa(*out[c][:3]); out[c] = out[c][3:] + [s]
+                if c+1 >= len(out): out.append([])
+                out[c+1].append(cy); changed = True
+    total = 0
+    for c, bits in enumerate(out):
+        for b in bits:
+            total = total + (b.astype(np.int64) << c)
+    return total
+
+exact = exhaustive_exact()
+target = (6.994, 0.046, 0.109)
+results = []
+for h3, h2, s2h3, s2h2, cp in itertools.product(
+        ['fa','comp0','pass'], ['ha','pass'], ['fa','comp0'], ['ha'], ['app','pre']):
+    t = reduce_grouped(pp_cols(), 'proposed', h3, h2, s2h3, s2h2, cp)
+    m = evaluate(t, exact)
+    tag = f"h3={h3} h2={h2} s2h3={s2h3} cp={cp}"
+    results.append((abs(m.er_pct-target[0]), tag, m))
+    print(f"{tag:40s} ER={m.er_pct:.3f} NMED={m.nmed_pct:.3f} MRED={m.mred_pct:.3f}")
+results.sort(key=lambda r: r[0])
+print("\nBEST:", results[0][1], results[0][2].row())

@@ -1,0 +1,109 @@
+"""Systematic reduction-structure search pinned by three Table-2 rows."""
+import itertools, sys
+import numpy as np
+sys.path.insert(0, 'src')
+from repro.core import compressors as C
+from repro.core.metrics import evaluate, exhaustive_exact
+
+N = 8
+
+def pp_cols():
+    a = np.arange(256, dtype=np.int64)[:, None] + np.zeros((1,256), np.int64)
+    b = np.arange(256, dtype=np.int64)[None, :] + np.zeros((256,1), np.int64)
+    cols = [[] for _ in range(2*N-1)]
+    for i in range(N):
+        ai = (a >> i) & 1
+        for j in range(N):
+            cols[i+j].append(((ai & ((b >> j) & 1)), 'pp', i))
+    return cols
+
+def comp(design, bits):
+    s, c = C.compress(design, bits[0][0], bits[1][0], bits[2][0], bits[3][0])
+    return s, c
+def fa(bits):
+    x,y,z = bits[0][0],bits[1][0],bits[2][0]
+    return x^y^z, (x&y)|(x&z)|(y&z)
+def ha(bits):
+    x,y = bits[0][0],bits[1][0]
+    return x^y, x&y
+
+ORDERINGS = {
+ 'nat':   lambda bits: bits,
+ 'rev':   lambda bits: list(reversed(bits)),
+ 'sumfirst': lambda bits: sorted(bits, key=lambda b: {'sum':0,'pp':1,'carry':2,'fs':1,'fc':2,'hs':1,'hc':2}[b[1]]),
+ 'carryfirst': lambda bits: sorted(bits, key=lambda b: {'carry':0,'fc':0,'hc':0,'pp':1,'sum':2,'fs':2,'hs':2}[b[1]]),
+}
+
+def run_stage(cols, design, target, h3mode, h2mode, order, over4):
+    ncols = len(cols)+2
+    out = [[] for _ in range(ncols)]
+    for c in range(len(cols)):
+        bits = ORDERINGS[order](list(cols[c]))
+        def height():
+            return len(bits) + len(out[c])
+        while len(bits) >= 4 and (over4 or height() > target):
+            s, cy = comp(design, bits[:4]); bits = bits[4:]
+            out[c].append((s,'sum',0)); out[c+1].append((cy,'carry',0))
+        if len(bits) == 3 and height() > target:
+            if h3mode == 'fa':
+                s, cy = fa(bits); bits=[]
+                out[c].append((s,'fs',0)); out[c+1].append((cy,'fc',0))
+            elif h3mode == 'comp0':
+                z = (bits[0][0]*0, 'pp', 0)
+                s, cy = comp(design, bits+[z]); bits=[]
+                out[c].append((s,'sum',0)); out[c+1].append((cy,'carry',0))
+        if len(bits) == 2 and height() > target and h2mode == 'ha':
+            s, cy = ha(bits); bits=[]
+            out[c].append((s,'hs',0)); out[c+1].append((cy,'hc',0))
+        out[c].extend(bits)
+    while out and not out[-1]: out.pop()
+    return out
+
+def finalize(cols):
+    # exact cleanup to <=2 rows then add
+    changed = True
+    while changed:
+        changed = False
+        for c in range(len(cols)):
+            while len(cols[c]) > 2:
+                s, cy = fa(cols[c][:3]); cols[c] = cols[c][3:]
+                cols[c].append((s,'fs',0))
+                if c+1 >= len(cols): cols.append([])
+                cols[c+1].append((cy,'fc',0)); changed = True
+    total = 0
+    for c, bits in enumerate(cols):
+        for b,_,_ in bits:
+            total = total + (b.astype(np.int64) << c)
+    return total
+
+def mult(design, v):
+    s1h3, s1h2, s2h3, order1, order2, over4_1, over4_2 = v
+    cols = pp_cols()
+    cols = run_stage(cols, design, 4, s1h3, s1h2, order1, over4_1)
+    cols = run_stage(cols, design, 2, s2h3, 'ha', order2, over4_2)
+    return finalize(cols)
+
+exact = exhaustive_exact()
+targets = {'proposed': (6.994,0.046,0.109),
+           'design16_d2': (86.326,1.879,9.551),
+           'design12': (68.498,0.596,3.496)}
+
+space = list(itertools.product(
+    ['fa','comp0','pass'], ['ha','pass'], ['fa','comp0'],
+    ['nat','rev'], list(ORDERINGS), [False,True], [False,True]))
+print(f"{len(space)} variants")
+best = []
+for v in space:
+    t = mult('proposed', v)
+    m = evaluate(t, exact)
+    d = abs(m.er_pct-6.994)+abs(m.nmed_pct-0.046)*10+abs(m.mred_pct-0.109)*10
+    best.append((d, v, m))
+best.sort(key=lambda r: r[0])
+for d, v, m in best[:10]:
+    print(f"{d:8.4f} {str(v):70s} ER={m.er_pct:.3f} NMED={m.nmed_pct:.3f} MRED={m.mred_pct:.3f}")
+# cross-check top variant on other designs
+for d, v, m in best[:5]:
+    print('---', v)
+    for dsg, tgt in targets.items():
+        mm = evaluate(mult(dsg, v), exact)
+        print(f"   {dsg:14s} got ER={mm.er_pct:.3f} NMED={mm.nmed_pct:.3f} MRED={mm.mred_pct:.3f}  want {tgt}")

@@ -1,0 +1,100 @@
+"""Exhaustive search: stage-2 compressor column set (c3..c13), 2 stage-1 plans,
+2 orderings -> match 4 Table-2 rows."""
+import sys, itertools
+import numpy as np
+sys.path.insert(0, 'src')
+from repro.core import compressors as C
+
+N = 8
+A = np.arange(256, dtype=np.int64)[:, None] + np.zeros((1,256), np.int64)
+B = np.arange(256, dtype=np.int64)[None, :] + np.zeros((256,1), np.int64)
+EXACT = A * B
+NZ = EXACT != 0
+EX_SAFE = np.where(NZ, EXACT, 1)
+
+def comp(design, bits, col):
+    s, c = C.compress(design, bits[0], bits[1], bits[2], bits[3])
+    return s, c
+def fa(b): x,y,z=b; return x^y^z, (x&y)|(x&z)|(y&z)
+def ha(b): x,y=b; return x^y, x&y
+
+def stage1(design, plan):
+    cols = [[] for _ in range(17)]
+    for i in range(N):
+        for j in range(N):
+            cols[i+j].append(((A>>i)&1) & ((B>>j)&1))
+    mid = [[] for _ in range(17)]
+    if plan == 'uncond':   # comp per column while >=4 pp bits remain
+        for c in range(15):
+            bits = list(cols[c])
+            while len(bits) >= 4:
+                s, cy = comp(design, bits[:4], c); bits = bits[4:]
+                mid[c].append(s); mid[c+1].append(cy)
+            mid[c] = bits + mid[c]
+    else:  # textbook dadda plan
+        plan1 = {4:['ha'],5:['c'],6:['c','ha'],7:['c','c'],8:['c','fa'],9:['c','ha'],10:['c'],11:['ha']}
+        for c in range(15):
+            bits = list(cols[c]) + mid[c]; mid[c] = []
+            for op in plan1.get(c, []):
+                if op=='c': s, cy = comp(design, bits[:4], c); bits = bits[4:]
+                elif op=='fa': s, cy = fa(bits[:3]); bits = bits[3:]
+                else: s, cy = ha(bits[:2]); bits = bits[2:]
+                mid[c].append(s); mid[c+1].append(cy)
+            mid[c] = bits + mid[c]
+    return mid
+
+def stage2(design, mid, comp_cols, order):
+    out = [[] for _ in range(18)]
+    for c in range(17):
+        bits = list(mid[c])
+        if order == 'rev': bits = list(reversed(bits))
+        if c in comp_cols and len(bits) >= 4:
+            s, cy = comp(design, bits[:4], c); bits = bits[4:]
+            out[c].append(s); out[c+1].append(cy)
+        out[c] = bits + out[c]
+    # exact cleanup to <= 2 rows
+    for c in range(18):
+        while len(out[c]) > 2:
+            s, cy = fa(out[c][:3]); out[c] = out[c][3:] + [s]
+            if c+1 < 18: out[c+1].append(cy)
+    total = 0
+    for c, bits in enumerate(out):
+        for b in bits:
+            total = total + (b.astype(np.int64) << c)
+    return total
+
+def metrics(t):
+    ed = np.abs(t - EXACT)
+    return (100*(ed!=0).mean(), 100*ed.mean()/65025,
+            100*np.where(NZ, ed/EX_SAFE, 0).mean())
+
+TGT = {'proposed': (6.994,0.046,0.109), 'design16_d2': (86.326,1.879,9.551),
+       'design12': (68.498,0.596,3.496), 'design17_d2': (21.296,0.162,0.578)}
+
+mids = {}
+best = []
+for plan in ['uncond','textbook']:
+    mids[plan] = {d: stage1(d, plan) for d in TGT}
+    hs = [len(x) for x in mids[plan]['proposed']]
+    print(plan, 'mid heights:', hs)
+    cand_cols = [c for c in range(17) if hs[c] >= 4]
+    print(' candidate comp cols:', cand_cols)
+    for r in range(len(cand_cols)+1):
+        for combo in itertools.combinations(cand_cols, r):
+            for order in ['nat','rev']:
+                t = stage2('proposed', mids[plan]['proposed'], set(combo), order)
+                er, nmed, mred = metrics(t)
+                d = abs(er-6.994) + 20*abs(nmed-0.046) + 10*abs(mred-0.109)
+                if d < 1.0:
+                    best.append((d, plan, combo, order, (er, nmed, mred)))
+best.sort(key=lambda r: r[0])
+print(f"\n{len(best)} candidates within tolerance")
+for d, plan, combo, order, m in best[:12]:
+    print(f"{d:7.4f} {plan:8s} {order:3s} comps@{combo}  ER={m[0]:.3f} NMED={m[1]:.3f} MRED={m[2]:.3f}")
+# cross-validate best few on other designs
+for d, plan, combo, order, m in best[:4]:
+    print('---', plan, combo, order)
+    for dsg, tgt in TGT.items():
+        t = stage2(dsg, mids[plan][dsg], set(combo), order)
+        er, nmed, mred = metrics(t)
+        print(f"   {dsg:13s} got ({er:7.3f},{nmed:6.3f},{mred:7.3f})  want {tgt}")

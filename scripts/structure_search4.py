@@ -1,0 +1,115 @@
+"""Micro-variants of stage-1 plan + input-selection to close the ER gap."""
+import sys, itertools
+import numpy as np
+sys.path.insert(0, 'src')
+from repro.core import compressors as C
+
+N = 8
+A = np.arange(256, dtype=np.int64)[:, None] + np.zeros((1,256), np.int64)
+B = np.arange(256, dtype=np.int64)[None, :] + np.zeros((256,1), np.int64)
+EXACT = A * B
+NZ = EXACT != 0; EX_SAFE = np.where(NZ, EXACT, 1)
+
+def comp(d, bits): 
+    s, c = C.compress(d, bits[0], bits[1], bits[2], bits[3]); return s, c
+def fa(b): x,y,z=b; return x^y^z, (x&y)|(x&z)|(y&z)
+def ha(b): x,y=b; return x^y, x&y
+
+# stage-1 plan variants: dict col -> op list; sel: which bits comp takes
+PLANS = {
+ 'V0': {4:['ha'],5:['c'],6:['c','ha'],7:['c','c'],8:['c','fa'],9:['c','ha'],10:['c'],11:['ha']},
+ 'V1': {4:['ha'],5:['c'],6:['c','fa'],7:['c','c'],8:['c','fa'],9:['c','ha'],10:['c'],11:['ha']},
+ 'V2': {4:['fa'],5:['c'],6:['c','ha'],7:['c','c'],8:['c','fa'],9:['c','ha'],10:['c'],11:['ha']},
+ 'V3': {4:['ha'],5:['c'],6:['c','ha'],7:['c','c'],8:['c','fa'],9:['c','fa'],10:['c'],11:['ha']},
+ 'V4': {4:['ha'],5:['c'],6:['c','ha'],7:['c','c'],8:['c','fa'],9:['c','ha'],10:['c','ha'],11:[]},
+ 'V5': {4:['ha'],5:['c'],6:['c','ha'],7:['c','c'],8:['c','fa'],9:['c','ha'],10:['c'],11:['fa']},
+ 'V6': {3:['ha'],4:['ha'],5:['c'],6:['c','ha'],7:['c','c'],8:['c','fa'],9:['c','ha'],10:['c'],11:['ha']},
+ 'V7': {4:['ha'],5:['c','ha'],6:['c','ha'],7:['c','c'],8:['c','fa'],9:['c','ha'],10:['c'],11:['ha']},
+}
+def stage1(d, plan, sel):
+    cols = [[] for _ in range(17)]
+    for i in range(N):
+        for j in range(N):
+            cols[i+j].append(((A>>i)&1) & ((B>>j)&1))
+    mid = [[] for _ in range(17)]
+    for c in range(15):
+        bits = list(cols[c]) + mid[c]; mid[c] = []
+        if sel == 'tail':  # comp takes LAST 4 pp (high rows) instead of first
+            bits = list(reversed(bits))
+        for op in PLANS[plan].get(c, []):
+            if op=='c': s, cy = comp(d, bits[:4]); bits = bits[4:]
+            elif op=='fa': s, cy = fa(bits[:3]); bits = bits[3:]
+            else: s, cy = ha(bits[:2]); bits = bits[2:]
+            mid[c].append(s); mid[c+1].append(cy)
+        mid[c] = bits + mid[c]
+    return mid
+
+def stage2(d, mid, comp_cols):
+    out = [[] for _ in range(18)]
+    for c in range(17):
+        bits = list(mid[c])
+        if c in comp_cols and len(bits) >= 4:
+            s, cy = comp(d, bits[:4]); bits = bits[4:]
+            out[c].append(s); out[c+1].append(cy)
+        out[c] = bits + out[c]
+    for c in range(18):
+        while len(out[c]) > 2:
+            s, cy = fa(out[c][:3]); out[c] = out[c][3:] + [s]
+            if c+1 < 18: out[c+1].append(cy)
+    t = 0
+    for c, bits in enumerate(out):
+        for b in bits: t = t + (b.astype(np.int64) << c)
+    return t
+
+def metrics(t):
+    ed = np.abs(t - EXACT)
+    return (100*(ed!=0).mean(), 100*ed.mean()/65025, 100*np.where(NZ, ed/EX_SAFE, 0).mean())
+
+best = []
+s2sets = [tuple(range(3,11)), tuple(range(3,12)), tuple(range(2,11)),
+          (3,4,5,6,7,8,9,10,12), tuple(range(4,11)), tuple(range(3,13))]
+for plan, sel in itertools.product(PLANS, ['head','tail']):
+    for s2 in s2sets:
+        t = stage2('proposed', stage1('proposed', plan, sel), set(s2))
+        er, nmed, mred = metrics(t)
+        d = abs(er-6.994) + 20*abs(nmed-0.046) + 10*abs(mred-0.109)
+        best.append((d, plan, sel, s2, (er, nmed, mred)))
+best.sort(key=lambda r: r[0])
+for d, plan, sel, s2, m in best[:15]:
+    print(f"{d:7.4f} {plan} {sel:4s} s2={s2}  ER={m[0]:.3f} NMED={m[1]:.4f} MRED={m[2]:.4f}")
+
+print("\n--- stage-2 chained variant (comp consumes in-stage carry) ---")
+def stage2_chained(d, mid, comp_cols, carry_into_comp):
+    out = [[] for _ in range(18)]
+    pend = {}
+    for c in range(17):
+        bits = list(mid[c])
+        if carry_into_comp and c in pend:
+            bits = [pend.pop(c)] + bits
+        elif c in pend:
+            out[c].append(pend.pop(c))
+        if c in comp_cols and len(bits) >= 4:
+            s, cy = comp(d, bits[:4]); bits = bits[4:]
+            out[c].append(s); pend[c+1] = cy
+        out[c] = bits + out[c]
+    for c, cy in pend.items(): out[c].append(cy)
+    for c in range(18):
+        while len(out[c]) > 2:
+            s, cy = fa(out[c][:3]); out[c] = out[c][3:] + [s]
+            if c+1 < 18: out[c+1].append(cy)
+    t = 0
+    for c, bits in enumerate(out):
+        for b in bits: t = t + (b.astype(np.int64) << c)
+    return t
+
+res = []
+for plan, sel in itertools.product(['V0','V5','V2'], ['head','tail']):
+    for s2 in s2sets:
+        mid = stage1('proposed', plan, sel)
+        t = stage2_chained('proposed', mid, set(s2), True)
+        er, nmed, mred = metrics(t)
+        d = abs(er-6.994) + 20*abs(nmed-0.046) + 10*abs(mred-0.109)
+        res.append((d, plan, sel, s2, (er,nmed,mred)))
+res.sort(key=lambda r: r[0])
+for d, plan, sel, s2, m in res[:8]:
+    print(f"{d:7.4f} {plan} {sel:4s} s2={s2}  ER={m[0]:.3f} NMED={m[1]:.4f} MRED={m[2]:.4f}")

@@ -1,0 +1,3 @@
+"""repro: JAX/TPU framework reproducing 'Low Power Approximate Multiplier
+Architecture for Deep Neural Networks' (Jaswal et al., CS.AR 2025)."""
+__version__ = "1.0.0"

@@ -1,0 +1,11 @@
+"""hymba-1.5b [hybrid] — parallel attn+mamba heads [arXiv:2411.13676; hf]."""
+import jax.numpy as jnp
+from repro.models.transformer_lm import ArchConfig
+
+CONFIG = ArchConfig(
+    name="hymba-1.5b", family="hybrid",
+    n_layers=32, d_model=1600, n_heads=25, n_kv_heads=5, d_ff=5504,
+    vocab=32001, head_dim=64, ssm="hymba", ssm_state=16,
+    local_window=1024, sub_quadratic=True,   # SWA attn branch + SSM branch
+    param_dtype=jnp.bfloat16,
+)

@@ -1,0 +1,13 @@
+"""llama-3.2-vision-11b [vlm] — cross-attn image layers every 5th layer
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified]. Vision frontend is a STUB:
+input_specs() provides precomputed patch embeddings (B, enc_len, enc_dim)."""
+import jax.numpy as jnp
+from repro.models.transformer_lm import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama-3.2-vision-11b", family="vlm",
+    n_layers=40, d_model=4096, n_heads=32, n_kv_heads=8, d_ff=14336,
+    vocab=128256, head_dim=128, rope_theta=500000.0,
+    cross_every=5, enc_dim=1280, enc_len=1601,
+    param_dtype=jnp.bfloat16,
+)

@@ -1,0 +1,13 @@
+"""musicgen-large [audio] — decoder-only over EnCodec tokens
+[arXiv:2306.05284; hf]. EnCodec frontend is a STUB: input_specs() provides
+precomputed frame embeddings; the 4 codebook heads share the backbone."""
+import jax.numpy as jnp
+from repro.models.transformer_lm import ArchConfig
+
+CONFIG = ArchConfig(
+    name="musicgen-large", family="audio",
+    n_layers=48, d_model=2048, n_heads=32, n_kv_heads=32, d_ff=8192,
+    vocab=2048, head_dim=64, mlp_act="gelu",
+    embed_stub=True, n_codebooks=4,
+    param_dtype=jnp.bfloat16,
+)

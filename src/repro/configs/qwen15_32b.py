@@ -1,0 +1,10 @@
+"""qwen1.5-32b [dense] — QKV bias [hf:Qwen/Qwen1.5 family]."""
+import jax.numpy as jnp
+from repro.models.transformer_lm import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen1.5-32b", family="dense",
+    n_layers=64, d_model=5120, n_heads=40, n_kv_heads=40, d_ff=27392,
+    vocab=152064, head_dim=128, qkv_bias=True, tied_embeddings=False,
+    param_dtype=jnp.bfloat16,
+)

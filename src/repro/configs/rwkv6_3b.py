@@ -1,0 +1,13 @@
+"""rwkv6-3b [ssm] — Finch, data-dependent decay, attention-free
+[arXiv:2404.05892; hf]. O(1)-state decode -> long_500k runs."""
+import jax.numpy as jnp
+from repro.models.transformer_lm import ArchConfig
+
+CONFIG = ArchConfig(
+    name="rwkv6-3b", family="ssm",
+    n_layers=32, d_model=2560, n_heads=40, n_kv_heads=40, d_ff=8960,
+    vocab=65536, ssm="rwkv6", sub_quadratic=True,
+    rwkv_chunked=True,   # chunk-parallel WKV (39x HBM cut, §Perf; set
+                         # rwkv_chunked=False for the sequential baseline)
+    tied_embeddings=False, param_dtype=jnp.bfloat16,
+)

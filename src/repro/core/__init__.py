@@ -1,0 +1,1 @@
+from repro.core import compressors, deficit, hwproxy, luts, metrics, multiplier

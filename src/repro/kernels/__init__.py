@@ -1,0 +1,2 @@
+from repro.kernels.approx_matmul import approx_matmul_pallas
+from repro.kernels import ops, ref

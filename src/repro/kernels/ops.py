@@ -1,0 +1,32 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+`approx_matmul` is what quant.matmul routes through when
+`enable_pallas(True)` — same contract as the jnp reference backends.
+On CPU the kernels run in interpret mode (bit-exact, slow); on TPU set
+interpret=False (the default flips on TPU backends).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.approx_matmul import approx_matmul_pallas
+from repro.quant.quantize import QuantConfig
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def approx_matmul(x_q: jax.Array, w_q: jax.Array,
+                  cfg: QuantConfig) -> jax.Array:
+    """Bit-exact approximate-multiplier matmul (paper semantics)."""
+    return approx_matmul_pallas(
+        x_q, w_q, design=cfg.multiplier, kernel="deficit",
+        interpret=_interpret_default())
+
+
+def stage1_matmul(x_q: jax.Array, w_q: jax.Array) -> jax.Array:
+    """Beyond-paper MXU-friendly re-approximation (stage-1 errors only)."""
+    return approx_matmul_pallas(
+        x_q, w_q, kernel="stage1", interpret=_interpret_default())

@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for the Pallas kernels (the bit-exact ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import luts
+from repro.core.multiplier import MultiplierConfig, proposed_multiplier
+
+
+def approx_matmul_ref(x_q: jax.Array, w_q: jax.Array,
+                      mult_cfg: MultiplierConfig | None = None) -> jax.Array:
+    """out[m,n] = sum_k signedLUT(x[m,k], w[k,n]); int8 in, int32 out.
+
+    Small-shape oracle (materializes (M,K,N) int32)."""
+    mult_cfg = mult_cfg or proposed_multiplier("proposed")
+    tbl = jnp.asarray(luts.signed_product_lut(mult_cfg))      # (256,256) i32
+    xi = x_q.astype(jnp.uint8).astype(jnp.int32)
+    wi = w_q.astype(jnp.uint8).astype(jnp.int32)
+    prods = tbl[xi[:, :, None], wi[None, :, :]]
+    return prods.sum(axis=1).astype(jnp.int32)
+
+
+def stage1_matmul_ref(x_q: jax.Array, w_q: jax.Array) -> jax.Array:
+    """Oracle for the stage-1-corrected (beyond-paper) kernel."""
+    from repro.quant.matmul import approx_matmul_stage1
+    from repro.quant.quantize import QuantConfig
+    return approx_matmul_stage1(x_q, w_q, QuantConfig(
+        backend="approx_stage1"))

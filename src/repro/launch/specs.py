@@ -1,0 +1,127 @@
+"""Abstract input/state specs for the dry-run (ShapeDtypeStruct stand-ins —
+weak-type-correct, shardable, no device allocation)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+from repro.configs import registry
+from repro.models import transformer_lm as TLM
+from repro.models.transformer_lm import ArchConfig
+from repro.nn import module as M
+from repro.optim import adamw
+from repro.parallel.sharding import (ShardingRules, DEFAULT_RULES,
+                                     prune_spec)
+
+
+def _batch_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(
+        shape, dtype,
+        sharding=NamedSharding(mesh, prune_spec(shape, spec, mesh)))
+
+
+def input_specs(cfg: ArchConfig, shape_name: str, mesh: Mesh,
+                rules: ShardingRules = DEFAULT_RULES) -> Dict[str, Any]:
+    """Abstract train/serve inputs for one (arch x shape) cell."""
+    seq, batch, kind = registry.SHAPES[shape_name]
+    ba = _batch_axes(mesh)
+    bspec = PS(ba if len(ba) > 1 else (ba[0] if ba else None))
+    out: Dict[str, Any] = {}
+    if kind == "train":
+        if cfg.embed_stub:
+            out["embeds"] = _sds((batch, seq, cfg.d_model), jnp.bfloat16,
+                                 mesh, PS(bspec[0], None, None))
+        else:
+            out["tokens"] = _sds((batch, seq), jnp.int32, mesh,
+                                 PS(bspec[0], None))
+        lab_shape = ((batch, seq, cfg.n_codebooks) if cfg.n_codebooks > 1
+                     else (batch, seq))
+        out["labels"] = _sds(lab_shape, jnp.int32, mesh,
+                             PS(*( [bspec[0]] + [None] * (len(lab_shape) - 1))))
+        if cfg.cross_every:
+            out["enc"] = _sds((batch, cfg.enc_len, cfg.enc_dim), jnp.bfloat16,
+                              mesh, PS(bspec[0], None, None))
+    else:  # prefill / decode
+        tok_len = seq if kind == "prefill" else 1
+        if cfg.embed_stub:
+            out["tokens"] = _sds((batch, tok_len, cfg.d_model), jnp.bfloat16,
+                                 mesh, PS(bspec[0], None, None))
+        else:
+            out["tokens"] = _sds((batch, tok_len), jnp.int32, mesh,
+                                 PS(bspec[0], None))
+        if cfg.cross_every:
+            out["enc"] = _sds((batch, cfg.enc_len, cfg.enc_dim), jnp.bfloat16,
+                              mesh, PS(bspec[0], None, None))
+        if kind == "decode":
+            out["pos"] = _sds((), jnp.int32, mesh, PS())
+    return out
+
+
+def cache_specs(cfg: ArchConfig, shape_name: str, mesh: Mesh,
+                rules: ShardingRules = DEFAULT_RULES):
+    """(abstract cache pytree with shardings). Leaves carry a leading
+    stacked 'repeat' dim from the block program."""
+    seq, batch, kind = registry.SHAPES[shape_name]
+    ba = _batch_axes(mesh)
+    batch_ax = ba if len(ba) > 1 else (ba[0] if ba else None)
+    # shard the cache sequence dim for very long contexts (SP for KV)
+    seq_ax = "data" if (shape_name == "long_500k" and batch == 1) else None
+    abstract = jax.eval_shape(
+        lambda: TLM.init_cache(cfg, batch, seq, jnp.bfloat16))
+
+    msize = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+
+    def spec_for(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        r = leaf.ndim
+        if name in ("k", "v"):          # (rep, B, S, H, D)
+            s_ax = None if leaf.shape[2] != seq else seq_ax
+            if leaf.shape[3] % msize == 0:      # TP over kv heads
+                return PS(None, batch_ax, s_ax, "model", None)
+            return PS(None, batch_ax, s_ax, None, "model")  # ...or head_dim
+        if name in ("ckv", "kpe"):      # (rep, B, S, C)
+            return PS(None, batch_ax, seq_ax, None)
+        if name == "S":                 # (rep, B, H, N, N)
+            return PS(None, batch_ax, "model", None, None)
+        if name == "h":                 # (rep, B, Di, Ns)
+            return PS(None, batch_ax, "model", None)
+        if name == "conv":              # (rep, B, k-1, Di)
+            return PS(None, batch_ax, None, "model")
+        return PS(*([None, batch_ax] + [None] * (r - 2)))
+
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: jax.ShapeDtypeStruct(
+            l.shape, l.dtype,
+            sharding=NamedSharding(mesh,
+                                   prune_spec(l.shape, spec_for(p, l),
+                                              mesh))),
+        abstract)
+
+
+def model_state_specs(cfg: ArchConfig, mesh: Mesh,
+                      rules: ShardingRules = DEFAULT_RULES,
+                      opt_cfg: Optional[adamw.AdamWConfig] = None):
+    """Abstract (params[, opt_state]) with FSDP+TP shardings."""
+    def abstract(desc_tree):
+        spec = M.param_specs(desc_tree, rules, mesh)
+        return jax.tree.map(
+            lambda desc, sp: jax.ShapeDtypeStruct(
+                desc.shape, desc.dtype,
+                sharding=NamedSharding(mesh, prune_spec(desc.shape, sp,
+                                                        mesh))),
+            desc_tree, spec, is_leaf=M.is_desc)
+
+    d = TLM.descs(cfg)
+    params = abstract(d)
+    if opt_cfg is None:
+        return params
+    opt = abstract(adamw.state_descs(d, opt_cfg))
+    return params, opt

@@ -1,0 +1,139 @@
+"""The paper's application models: Keras-style CNN (Fig. 5), LeNet-5, and
+FFDNet (Fig. 6) — with the custom approximate convolution layers.
+
+Every conv/dense goes through the quant backend selected per model, so the
+exact multiplier can be swapped for the approximate one exactly as in §5 of
+the paper ("the exact multiplier in the convolutional layers was substituted
+with the proposed approximate multiplier").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import conv as CV
+from repro.nn import layers as L
+from repro.nn.module import ParamDesc
+from repro.quant.quantize import QuantConfig, BF16
+
+
+# ---------------------------------------------------------------------------
+# Keras-style CNN (paper Fig. 5)
+# ---------------------------------------------------------------------------
+
+def keras_cnn_descs(n_classes: int = 10):
+    return {
+        "c1": CV.conv2d_desc(1, 32, 3),
+        "c2": CV.conv2d_desc(32, 64, 3),
+        "fc1": {"w": ParamDesc((7 * 7 * 64, 128), (None, None)),
+                "b": ParamDesc((128,), (None,), "zeros")},
+        "fc2": {"w": ParamDesc((128, n_classes), (None, None)),
+                "b": ParamDesc((n_classes,), (None,), "zeros")},
+    }
+
+
+def keras_cnn_apply(params, x, quant: QuantConfig = BF16, qat=False):
+    x = jax.nn.relu(CV.conv2d(params["c1"], x, quant, qat=qat))
+    x = CV.maxpool2(x)
+    x = jax.nn.relu(CV.conv2d(params["c2"], x, quant, qat=qat))
+    x = CV.maxpool2(x)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(L.dense(params["fc1"], x, quant, qat=qat))
+    return L.dense(params["fc2"], x, quant, qat=qat)
+
+
+# ---------------------------------------------------------------------------
+# LeNet-5 (paper Table 5)
+# ---------------------------------------------------------------------------
+
+def lenet5_descs(n_classes: int = 10):
+    return {
+        "c1": CV.conv2d_desc(1, 6, 5),
+        "c2": CV.conv2d_desc(6, 16, 5),
+        "fc1": {"w": ParamDesc((7 * 7 * 16, 120), (None, None)),
+                "b": ParamDesc((120,), (None,), "zeros")},
+        "fc2": {"w": ParamDesc((120, 84), (None, None)),
+                "b": ParamDesc((84,), (None,), "zeros")},
+        "fc3": {"w": ParamDesc((84, n_classes), (None, None)),
+                "b": ParamDesc((n_classes,), (None,), "zeros")},
+    }
+
+
+def lenet5_apply(params, x, quant: QuantConfig = BF16, qat=False):
+    x = jax.nn.relu(CV.conv2d(params["c1"], x, quant, qat=qat))
+    x = CV.avgpool2(x)
+    x = jax.nn.relu(CV.conv2d(params["c2"], x, quant, qat=qat))
+    x = CV.avgpool2(x)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(L.dense(params["fc1"], x, quant, qat=qat))
+    x = jax.nn.relu(L.dense(params["fc2"], x, quant, qat=qat))
+    return L.dense(params["fc3"], x, quant, qat=qat)
+
+
+# ---------------------------------------------------------------------------
+# FFDNet (paper Fig. 6): reversible downsample -> conv stack -> upsample
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FFDNetConfig:
+    depth: int = 8
+    width: int = 64
+    channels: int = 1
+
+
+def ffdnet_descs(cfg: FFDNetConfig = FFDNetConfig()):
+    cin = cfg.channels * 4 + 1                     # unshuffled + noise map
+    d: Dict[str, Any] = {"in": CV.conv2d_desc(cin, cfg.width, 3)}
+    for i in range(cfg.depth - 2):
+        d[f"mid{i}"] = CV.conv2d_desc(cfg.width, cfg.width, 3)
+    d["out"] = CV.conv2d_desc(cfg.width, cfg.channels * 4, 3)
+    return d
+
+
+def pixel_unshuffle(x):
+    b, h, w, c = x.shape
+    x = x.reshape(b, h // 2, 2, w // 2, 2, c)
+    return x.transpose(0, 1, 3, 2, 4, 5).reshape(b, h // 2, w // 2, 4 * c)
+
+
+def pixel_shuffle(x):
+    b, h, w, c = x.shape
+    x = x.reshape(b, h, w, 2, 2, c // 4)
+    return x.transpose(0, 1, 3, 2, 4, 5).reshape(b, h * 2, w * 2, c // 4)
+
+
+def ffdnet_apply(params, noisy, sigma, cfg: FFDNetConfig = FFDNetConfig(),
+                 quant: QuantConfig = BF16, qat=False):
+    """noisy: (B,H,W,C) in [0,1]; sigma: scalar or (B,) noise level /255."""
+    x = pixel_unshuffle(noisy)
+    smap = jnp.broadcast_to(jnp.reshape(sigma, (-1, 1, 1, 1)),
+                            (x.shape[0], x.shape[1], x.shape[2], 1))
+    x = jnp.concatenate([x, smap.astype(x.dtype)], axis=-1)
+    x = jax.nn.relu(CV.conv2d(params["in"], x, quant, qat=qat))
+    i = 0
+    while f"mid{i}" in params:
+        x = jax.nn.relu(CV.conv2d(params[f"mid{i}"], x, quant, qat=qat))
+        i += 1
+    x = CV.conv2d(params["out"], x, quant, qat=qat)
+    return noisy - pixel_shuffle(x)                # residual: predict noise
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def psnr(a, b):
+    mse = jnp.mean((a - b) ** 2)
+    return -10.0 * jnp.log10(jnp.maximum(mse, 1e-12))
+
+
+def ssim(a, b, c1=0.01 ** 2, c2=0.03 ** 2):
+    """Global-statistics SSIM (single window) — adequate for deltas."""
+    mu_a, mu_b = a.mean(), b.mean()
+    va, vb = a.var(), b.var()
+    cov = ((a - mu_a) * (b - mu_b)).mean()
+    return ((2 * mu_a * mu_b + c1) * (2 * cov + c2)
+            / ((mu_a ** 2 + mu_b ** 2 + c1) * (va + vb + c2)))

@@ -1,0 +1,97 @@
+"""Convolution layers with approximate-multiplier backends (the paper's
+"custom convolution layer"). Convs lower to im2col + quantized matmul so the
+same integer backends (exact / approx_lut / approx_deficit / approx_stage1)
+serve conv and dense layers — and the Pallas kernel covers both.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import ParamDesc
+from repro.quant.quantize import QuantConfig, fake_quant_per_channel
+from repro.quant.matmul import quantized_matmul
+
+
+def conv2d_desc(c_in: int, c_out: int, k: int = 3, dtype=jnp.float32,
+                bias: bool = True):
+    d = {"w": ParamDesc((k, k, c_in, c_out), (None, None, "conv_io", None),
+                        dtype=dtype)}
+    if bias:
+        d["b"] = ParamDesc((c_out,), (None,), "zeros", dtype=dtype)
+    return d
+
+
+def im2col(x: jax.Array, k: int, stride: int = 1,
+           padding: str = "SAME") -> Tuple[jax.Array, Tuple[int, int]]:
+    """x: (B,H,W,C) -> patches (B*Ho*Wo, k*k*C)."""
+    b, h, w, c = x.shape
+    if padding == "SAME":
+        ph = pw = k // 2
+        x = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+    ho = (x.shape[1] - k) // stride + 1
+    wo = (x.shape[2] - k) // stride + 1
+    idx_h = jnp.arange(ho) * stride
+    idx_w = jnp.arange(wo) * stride
+    patches = x[:, idx_h[:, None, None, None] + jnp.arange(k)[None, :, None,
+                                                             None],
+                idx_w[None, None, :, None] + jnp.arange(k)[None, None, None,
+                                                           :], :]
+    # (B, Ho, k, Wo, k, C) -> (B, Ho, Wo, k, k, C)
+    patches = patches.transpose(0, 1, 3, 2, 4, 5)
+    return patches.reshape(b * ho * wo, k * k * c), (ho, wo)
+
+
+def conv2d(params, x, quant: QuantConfig, stride: int = 1,
+           padding: str = "SAME", qat: bool = False):
+    """x: (B,H,W,Cin) -> (B,Ho,Wo,Cout) via the selected backend."""
+    w = params["w"]
+    k, _, c_in, c_out = w.shape
+    b = x.shape[0]
+    if quant.is_quantized and not qat:
+        cols, (ho, wo) = im2col(x, k, stride, padding)
+        y = quantized_matmul(cols, w.reshape(k * k * c_in, c_out), quant)
+        y = y.reshape(b, ho, wo, c_out)
+    else:
+        wq = fake_quant_per_channel(w, axis=-1) if qat else w
+        y = jax.lax.conv_general_dilated(
+            x, wq, (stride, stride), padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+def batchnorm_desc(c: int, dtype=jnp.float32):
+    return {"scale": ParamDesc((c,), (None,), "ones", dtype=dtype),
+            "bias": ParamDesc((c,), (None,), "zeros", dtype=dtype),
+            "mean": ParamDesc((c,), (None,), "zeros", dtype=dtype),
+            "var": ParamDesc((c,), (None,), "ones", dtype=dtype)}
+
+
+def batchnorm(params, x, training: bool = False, momentum: float = 0.9,
+              eps: float = 1e-5):
+    """Returns (y, new_stats). Inference uses stored running stats."""
+    if training:
+        red = tuple(range(x.ndim - 1))
+        mu = x.mean(axis=red)
+        var = x.var(axis=red)
+        new = {"mean": momentum * params["mean"] + (1 - momentum) * mu,
+               "var": momentum * params["var"] + (1 - momentum) * var}
+    else:
+        mu, var = params["mean"], params["var"]
+        new = {"mean": params["mean"], "var": params["var"]}
+    y = (x - mu) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    return y, new
+
+
+def maxpool2(x):
+    b, h, w, c = x.shape
+    return x.reshape(b, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
+
+
+def avgpool2(x):
+    b, h, w, c = x.shape
+    return x.reshape(b, h // 2, 2, w // 2, 2, c).mean(axis=(2, 4))

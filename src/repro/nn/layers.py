@@ -1,0 +1,121 @@
+"""Core layers: norms, dense (with quantized/approx backends), embeddings."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import ParamDesc
+from repro.quant.quantize import QuantConfig, fake_quant_per_channel
+from repro.quant.matmul import quantized_matmul
+
+
+# ---------------------------------------------------------------------------
+# Dense
+# ---------------------------------------------------------------------------
+
+def dense_desc(d_in: int, d_out: int, logical=( "embed", "mlp"),
+               dtype=jnp.float32, bias: bool = False, scale=None):
+    d = {"w": ParamDesc((d_in, d_out), logical, "normal", scale, dtype)}
+    if bias:
+        d["b"] = ParamDesc((d_out,), (logical[1],), "zeros", None, dtype)
+    return d
+
+
+def dense(params, x, quant: QuantConfig, qat: bool = False):
+    """y = x @ w (+ b), executed per the quant backend.
+
+    qat=True runs fake-quant (float ops, STE) — used when *training* a model
+    that will deploy on the approximate multiplier.
+    """
+    w = params["w"]
+    if quant.is_quantized and not qat:
+        y = quantized_matmul(x, w, quant)
+    else:
+        if qat:
+            w = fake_quant_per_channel(w, axis=-1)
+        y = jnp.einsum("...k,kn->...n", x, w,
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_desc(dim: int, dtype=jnp.float32):
+    return {"scale": ParamDesc((dim,), ("embed",), "ones", None, dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def layernorm_desc(dim: int, dtype=jnp.float32):
+    return {"scale": ParamDesc((dim,), ("embed",), "ones", None, dtype),
+            "bias": ParamDesc((dim,), ("embed",), "zeros", None, dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(
+        jnp.float32)
+    return y.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits
+# ---------------------------------------------------------------------------
+
+def embed_desc(vocab: int, dim: int, dtype=jnp.float32):
+    return {"table": ParamDesc((vocab, dim), ("vocab", "embed"), "embed",
+                               0.02, dtype)}
+
+
+def embed(params, ids):
+    return jnp.take(params["table"], ids, axis=0)
+
+
+def logits(params, x, true_vocab: Optional[int] = None):
+    """x @ table.T with optional masking of padded vocab entries."""
+    out = jnp.einsum("...d,vd->...v", x, params["table"],
+                     preferred_element_type=jnp.float32)
+    if true_vocab is not None and true_vocab < out.shape[-1]:
+        neg = jnp.finfo(jnp.float32).min
+        mask = jnp.arange(out.shape[-1]) < true_vocab
+        out = jnp.where(mask, out, neg)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Activations / misc
+# ---------------------------------------------------------------------------
+
+def swiglu(gate, up):
+    return jax.nn.silu(gate) * up
+
+
+def gelu(x):
+    return jax.nn.gelu(x)
+
+
+def softmax_cross_entropy(logits_, labels, true_vocab: Optional[int] = None):
+    """Mean CE over non-negative labels (-1 = padding)."""
+    logits_ = logits_.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits_, axis=-1)
+    ll = jnp.take_along_axis(logits_, labels[..., None].clip(0),
+                             axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = (lse - ll) * mask
+    return loss.sum() / jnp.maximum(mask.sum(), 1.0)

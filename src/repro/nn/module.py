@@ -1,0 +1,104 @@
+"""Minimal functional module system: parameter descriptors -> params/specs.
+
+A model is described by a pytree of ``ParamDesc`` leaves (shape + logical
+axes + initializer). From the same tree we derive:
+  - initialized parameters            (init_params)
+  - PartitionSpecs for pjit           (param_specs)
+  - abstract ShapeDtypeStructs        (abstract_params; used by the dry-run
+                                       to build sharded placeholders without
+                                       allocating 1T-parameter models)
+
+Descriptor trees are plain nested dicts, so layers compose by dict merging,
+and scan-over-layers stacking is a tree-map that prepends a 'layers' dim.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.sharding import ShardingRules
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDesc:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]          # logical axis name per dim
+    init: str = "normal"                         # normal|zeros|ones|embed
+    scale: Optional[float] = None                # None -> fan-in scaling
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def is_desc(x) -> bool:
+    return isinstance(x, ParamDesc)
+
+
+def _leaves(tree):
+    return jax.tree.leaves(tree, is_leaf=is_desc)
+
+
+def tree_map(fn, tree):
+    return jax.tree.map(fn, tree, is_leaf=is_desc)
+
+
+def init_params(tree, key: jax.Array):
+    descs = _leaves(tree)
+    keys = jax.random.split(key, max(1, len(descs)))
+    it = iter(range(len(descs)))
+
+    def one(d: ParamDesc):
+        k = keys[next(it)]
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, d.dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, d.dtype)
+        scale = d.scale
+        if scale is None:
+            fan_in = d.shape[0] if len(d.shape) >= 2 else max(d.shape[-1], 1)
+            if len(d.shape) >= 2:
+                fan_in = int(np.prod(d.shape[:-1]))
+            scale = fan_in ** -0.5
+        if d.init == "embed":
+            scale = 1.0 if d.scale is None else d.scale
+        return (jax.random.normal(k, d.shape, jnp.float32) * scale).astype(
+            d.dtype)
+
+    return tree_map(one, tree)
+
+
+def param_specs(tree, rules: ShardingRules, mesh):
+    return tree_map(lambda d: rules.spec(d.logical, mesh), tree)
+
+
+def param_shardings(tree, rules: ShardingRules, mesh):
+    return tree_map(lambda d: rules.sharding(d.logical, mesh), tree)
+
+
+def abstract_params(tree):
+    return tree_map(lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), tree)
+
+
+def stack(tree, n: int, logical: str = "layers"):
+    """Prepend a stacked dim of size n (for scan-over-layers params)."""
+    return tree_map(
+        lambda d: dataclasses.replace(
+            d, shape=(n,) + d.shape, logical=(logical,) + d.logical), tree)
+
+
+def cast(tree, dtype):
+    return tree_map(lambda d: dataclasses.replace(d, dtype=dtype), tree)
+
+
+def n_params(tree) -> int:
+    return int(sum(np.prod(d.shape) for d in _leaves(tree)))
+
+
+def n_bytes(tree) -> int:
+    return int(sum(np.prod(d.shape) * jnp.dtype(d.dtype).itemsize
+                   for d in _leaves(tree)))

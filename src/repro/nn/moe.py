@@ -1,0 +1,177 @@
+"""Mixture-of-Experts with sort-based capacity dispatch (EP over 'model').
+
+Dispatch is GShard-style with capacity dropping, implemented with sort +
+scatter (no (tokens, experts, capacity) one-hot tensor), so it scales to
+kimi-k2 (384 experts) / deepseek-v2 (160 experts) cell sizes. Experts are
+sharded over the 'model' mesh axis; tokens over ('pod','data') — GSPMD
+inserts the all-to-alls at the dispatch/combine boundaries.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import ParamDesc
+from repro.nn import layers as L
+from repro.parallel.sharding import ShardingRules, constrain
+from repro.quant.quantize import QuantConfig, fake_quant_per_channel
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    n_experts: int
+    top_k: int
+    d_ff: int                      # per-expert hidden
+    n_shared: int = 0              # shared (always-on) experts
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    int8_gather: bool = False      # quantize expert weights before the
+                                   # FSDP all-gather (2x collective bytes)
+
+
+import functools
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _q8_replicated(w, rules):
+    return _q8_fwd(w, rules)[0]
+
+
+def _q8_fwd(w, rules):
+    scale = jnp.max(jnp.abs(w), axis=1, keepdims=True).astype(
+        jnp.float32) / 127.0 + 1e-12                 # per (e, :, f) channel
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -127,
+                 127).astype(jnp.int8)
+    # replicate the int8 codes over the fsdp axis; keep experts sharded
+    q = constrain(q, rules, "experts", None, None)
+    scale = constrain(scale, rules, "experts", None, None)
+    return (q.astype(w.dtype) * scale.astype(w.dtype)), (w,)
+
+
+def _q8_bwd(rules, res, g):
+    (w,) = res
+    return (g.astype(w.dtype),)                      # straight-through
+
+
+_q8_replicated.defvjp(_q8_fwd, _q8_bwd)
+
+
+def moe_desc(cfg: MoEConfig, dtype=jnp.float32):
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.d_ff
+    d = {
+        "router": ParamDesc((D, E), ("embed", "experts"), scale=0.02,
+                            dtype=jnp.float32),
+        "w1": ParamDesc((E, D, F), ("experts", "fsdp", "mlp"), dtype=dtype),
+        "w3": ParamDesc((E, D, F), ("experts", "fsdp", "mlp"), dtype=dtype),
+        "w2": ParamDesc((E, F, D), ("experts", "mlp", "fsdp"), dtype=dtype),
+    }
+    if cfg.n_shared:
+        Fs = F * cfg.n_shared
+        d["shared_w1"] = ParamDesc((D, Fs), ("fsdp", "mlp"), dtype=dtype)
+        d["shared_w3"] = ParamDesc((D, Fs), ("fsdp", "mlp"), dtype=dtype)
+        d["shared_w2"] = ParamDesc((Fs, D), ("mlp", "fsdp"), dtype=dtype)
+    return d
+
+
+def apply(params, x, cfg: MoEConfig, rules: ShardingRules,
+          quant: QuantConfig, qat: bool = False):
+    """x: (B, S, D) -> (out, aux_loss).
+
+    Dispatch is GROUP-LOCAL (one group per sequence): capacity, sort and
+    scatter all happen within a group, so dispatch buffers shard as
+    (groups -> data axes, experts -> model axis) and never materialize a
+    global (tokens, experts) tensor. This is what lets kimi-k2's 384-expert
+    cells fit (EXPERIMENTS.md §Dry-run)."""
+    b, s, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    gk = s * K
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)             # (B, S, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- aux load-balancing loss (Switch-style) ----
+    me = probs.mean(axis=(0, 1))
+    ce = jnp.zeros((E,)).at[expert_ids.reshape(-1)].add(1.0) / (b * gk)
+    aux = cfg.router_aux_weight * E * jnp.sum(me * ce)
+
+    # ---- group-local sort-based dispatch with capacity ----
+    cap = int(max(1, round(gk / E * cfg.capacity_factor)))
+    se = expert_ids.reshape(b, gk)                              # (B, S*K)
+    st = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(s), K)[None], (b, gk))            # token idx
+    sg = gate_vals.reshape(b, gk)
+    order = jnp.argsort(se, axis=1)
+    se = jnp.take_along_axis(se, order, 1)
+    st = jnp.take_along_axis(st, order, 1)
+    sg = jnp.take_along_axis(sg, order, 1)
+    gidx = jnp.arange(b)[:, None]
+    idx = jnp.broadcast_to(jnp.arange(gk)[None], (b, gk))
+    starts = jnp.full((b, E), gk, jnp.int32).at[gidx, se].min(
+        idx.astype(jnp.int32))
+    pos_in_e = idx - starts[gidx, se]
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, se * cap + pos_in_e, E * cap)        # drop slot
+
+    # dispatch in K chunks of s tokens so no (B, S*K, D) gather ever
+    # materializes; gathers/scatters are vmapped over the group dim so they
+    # carry explicit batching dims — GSPMD keeps them batch-sharded instead
+    # of all-gathering the activations (the 40 TiB finding, EXPERIMENTS.md
+    # §Perf kimi iteration 3)
+    gather_b = jax.vmap(lambda xb, ib: xb[ib])
+    scat_add_b = jax.vmap(lambda bb, ib, vb: bb.at[ib].add(vb))
+    buf = jnp.zeros((b, E * cap + 1, d), x.dtype)
+    for c0 in range(K):
+        sl = slice(c0 * s, (c0 + 1) * s)
+        chunk = constrain(gather_b(x, st[:, sl]), rules, "batch", None, None)
+        buf = scat_add_b(buf, slot[:, sl], chunk)
+    buf = buf[:, :-1].reshape(b, E, cap, d)
+    buf = constrain(buf, rules, "batch", "experts", None, None)
+
+    w1, w3, w2 = params["w1"], params["w3"], params["w2"]
+    if cfg.int8_gather:
+        # quantize-before-gather: the int8 codes cross the FSDP axis, the
+        # bf16 dequant happens on the replicated side (2x gather bytes cut;
+        # STE backward -> grads reduce-scatter as usual)
+        w1 = _q8_replicated(w1, rules)
+        w3 = _q8_replicated(w3, rules)
+        w2 = _q8_replicated(w2, rules)
+    elif qat:
+        w1 = fake_quant_per_channel(w1, axis=-1)
+        w3 = fake_quant_per_channel(w3, axis=-1)
+        w2 = fake_quant_per_channel(w2, axis=-1)
+    h = jnp.einsum("becd,edf->becf", buf, w1,
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("becd,edf->becf", buf, w3,
+                   preferred_element_type=jnp.float32)
+    act = (jax.nn.silu(h) * u).astype(x.dtype)
+    y = jnp.einsum("becf,efd->becd", act, w2,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    y = constrain(y, rules, "batch", "experts", None, None)
+
+    y_flat = y.reshape(b, E * cap, d)
+    out = jnp.zeros((b, s, d), x.dtype)
+    for c0 in range(K):                     # combine in K chunks, as above
+        sl = slice(c0 * s, (c0 + 1) * s)
+        contrib = jnp.where(
+            keep[:, sl, None],
+            gather_b(y_flat, jnp.clip(slot[:, sl], 0, E * cap - 1))
+            * sg[:, sl, None].astype(x.dtype), 0)
+        contrib = constrain(contrib, rules, "batch", None, None)
+        out = scat_add_b(out, st[:, sl], contrib)
+
+    if cfg.n_shared:
+        hs = jnp.einsum("bsd,df->bsf", x, params["shared_w1"])
+        us = jnp.einsum("bsd,df->bsf", x, params["shared_w3"])
+        out = out + jnp.einsum("bsf,fd->bsd",
+                               (jax.nn.silu(hs) * us).astype(x.dtype),
+                               params["shared_w2"])
+
+    return constrain(out, rules, "batch", "seq", "embed"), aux

@@ -1,0 +1,290 @@
+"""State-space mixers: RWKV6 (Finch) time/channel mix and Mamba-lite.
+
+Both expose O(1)-state decode (the reason long_500k runs for ssm/hybrid
+archs). Recurrences scan over time with a compact carried state; projections
+go through the quantizable dense path (the approximate multiplier applies to
+the FLOP-dominant projections, while the elementwise decay path stays exact —
+DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import ParamDesc
+from repro.nn import layers as L
+from repro.parallel.sharding import ShardingRules, constrain
+from repro.quant.quantize import QuantConfig
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 time-mix
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    d_model: int
+    n_heads: int                   # head_dim = d_model // n_heads
+    decay_lora: int = 64
+    tmix_lora: int = 32
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+def rwkv_tmix_desc(cfg: RWKVConfig, dtype=jnp.float32):
+    D, H, N = cfg.d_model, cfg.n_heads, cfg.head_dim
+    return {
+        "mu": ParamDesc((5, D), (None, "embed"), "zeros", dtype=dtype),
+        "tm_w1": ParamDesc((D, 5 * cfg.tmix_lora), ("embed", None),
+                           scale=0.01, dtype=dtype),
+        "tm_w2": ParamDesc((5, cfg.tmix_lora, D), (None, None, "embed"),
+                           scale=0.01, dtype=dtype),
+        "wr": ParamDesc((D, D), ("embed", "heads"), dtype=dtype),
+        "wk": ParamDesc((D, D), ("embed", "heads"), dtype=dtype),
+        "wv": ParamDesc((D, D), ("embed", "heads"), dtype=dtype),
+        "wg": ParamDesc((D, D), ("embed", "heads"), dtype=dtype),
+        "wo": ParamDesc((D, D), ("heads", "embed"), dtype=dtype),
+        "w0": ParamDesc((D,), ("embed",), "zeros", dtype=dtype),
+        "wd_a": ParamDesc((D, cfg.decay_lora), ("embed", None), scale=0.01,
+                          dtype=dtype),
+        "wd_b": ParamDesc((cfg.decay_lora, D), (None, "embed"), scale=0.01,
+                          dtype=dtype),
+        "bonus": ParamDesc((H, N), ("heads", None), "zeros", dtype=dtype),
+        "ln_x": ParamDesc((D,), ("embed",), "ones", dtype=dtype),
+    }
+
+
+def _wkv_chunked(r, k, v, w, u, S0, chunk: int = 64):
+    """Chunk-parallel WKV recurrence (flash-linear-attention style).
+
+    Sequential form:  y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+                      S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    Within a chunk the pairwise decay factorizes per channel:
+      A[t,tau] = (r_t . P^ex_t) · (k_tau / P_tau),  P = cumprod(w) in-chunk,
+    so each chunk is two (C,C)/(C,N) matmuls instead of C sequential steps —
+    the §Perf memory-term fix for rwkv6 (EXPERIMENTS.md). Log-decays are
+    clamped at -15 per chunk so the P division never overflows; spans with
+    true decay < e^-15 are exactly 0 in fp32 anyway.
+
+    r,k,v,w: (B,T,H,N) fp32, w in (0,1]; u: (H,N); S0: (B,H,N,N).
+    Returns (y (B,T,H,N), S_final).
+    """
+    b, t, h, n = r.shape
+    c = min(chunk, t)
+    pad = (-t) % c
+    if pad:
+        zr = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zr(r), zr(k), zr(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+    nc = (t + pad) // c
+    shp = (b, nc, c, h, n)
+    rc, kc, vc, wc = (x.reshape(shp).transpose(1, 0, 2, 3, 4)
+                      for x in (r, k, v, w))       # (nc,B,C,H,N)
+
+    lw = jnp.log(jnp.maximum(wc, 1e-30))
+    cum = jnp.cumsum(lw, axis=2)                   # inclusive log-decay <= 0
+    cumex = cum - lw                               # decay up to t-1
+    ptot = jnp.exp(cum[:, :, -1])                  # (nc,B,H,N) chunk decay
+    # all exponents below are <= 0: underflow -> exact 0, never a division
+    rp = rc * jnp.exp(cumex)                       # inter-chunk queries
+    ks = kc * jnp.exp(cum[:, :, -1:] - cum)        # state-update keys
+
+    mask = jnp.tril(jnp.ones((c, c), jnp.float32), -1)
+    nb = max(1, min(8, n))                         # channel block for E
+    assert n % nb == 0
+
+    def body(S, xs):
+        rc_i, kc_i, vc_i, cum_i, cumex_i, rp_i, ks_i, ptot_i = xs
+        y_inter = jnp.einsum("bchn,bhnm->bchm", rp_i, S)
+        # intra-chunk pairwise decays, exact per (t, tau, channel):
+        #   E[t,tau,n] = exp(cumex[t,n] - cum[tau,n])   (<= 1 on the mask)
+        A = 0.0
+        for n0 in range(0, n, nb):
+            sl = slice(n0, n0 + nb)
+            diff = (cumex_i[:, :, None, :, sl]
+                    - cum_i[:, None, :, :, sl])        # (B,C,C,H,nb)
+            E = jnp.exp(jnp.minimum(diff, 0.0))
+            A = A + jnp.einsum("bthn,bdhn,btdhn->bhtd",
+                               rc_i[..., sl], kc_i[..., sl], E)
+        A = A * mask[None, None]
+        diag = jnp.einsum("bchn,bchn->bch", rc_i, kc_i * u[None, None])
+        y_intra = (jnp.einsum("bhcd,bdhn->bchn", A, vc_i)
+                   + diag[..., None] * vc_i)
+        S = ptot_i[..., None] * S + jnp.einsum("bchn,bchm->bhnm", ks_i,
+                                               vc_i)
+        return S, y_inter + y_intra
+
+    S_fin, ys = jax.lax.scan(
+        body, S0, (rc, kc, vc, cum, cumex, rp, ks, ptot))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, t + pad, h, n)[:, :t]
+    return y, S_fin
+
+
+def rwkv_tmix(params, x, cfg: RWKVConfig, rules: ShardingRules,
+              quant: QuantConfig, state=None, qat: bool = False,
+              chunked: bool = False):
+    """x: (B,S,D). state: dict(S=(B,H,N,N), xprev=(B,D)) or None.
+    Returns (out, new_state)."""
+    b, s, d = x.shape
+    H, N = cfg.n_heads, cfg.head_dim
+    xprev = (jnp.zeros((b, d), x.dtype) if state is None
+             else state["xprev"].astype(x.dtype))
+    x_shift = jnp.concatenate([xprev[:, None], x[:, :-1]], axis=1)
+    xx = x_shift - x
+
+    # data-dependent lerp (ddlerp) for the 5 channels; mu: (5, D)
+    lora = jnp.tanh(x @ params["tm_w1"]).reshape(b, s, 5, cfg.tmix_lora)
+    dd = jnp.einsum("bsfl,fld->bsfd", lora, params["tm_w2"])
+    mixed = x[:, :, None] + xx[:, :, None] * (
+        params["mu"][None, None] + dd)                          # (B,S,5,D)
+    xr, xk, xv, xw, xg = [mixed[:, :, i] for i in range(5)]
+
+    r = L.dense({"w": params["wr"]}, xr, quant, qat).reshape(b, s, H, N)
+    k = L.dense({"w": params["wk"]}, xk, quant, qat).reshape(b, s, H, N)
+    v = L.dense({"w": params["wv"]}, xv, quant, qat).reshape(b, s, H, N)
+    g = jax.nn.silu(L.dense({"w": params["wg"]}, xg, quant, qat))
+
+    # data-dependent decay (Finch): w = exp(-exp(w0 + lora(xw)))
+    wlog = params["w0"][None, None] + jnp.tanh(xw @ params["wd_a"]) @ params[
+        "wd_b"]
+    w = jnp.exp(-jnp.exp(wlog.astype(jnp.float32))).reshape(b, s, H, N)
+    u = params["bonus"].astype(jnp.float32)
+
+    S0 = (jnp.zeros((b, H, N, N), jnp.float32) if state is None
+          else state["S"])
+
+    if chunked and s > 1:
+        y4, S_fin = _wkv_chunked(r.astype(jnp.float32),
+                                 k.astype(jnp.float32),
+                                 v.astype(jnp.float32), w, u, S0)
+        y = y4.reshape(b, s, d).astype(x.dtype)
+    else:
+        def step(S, inp):
+            rt, kt, vt, wt = inp                                # (B,H,N)
+            kv = kt[..., :, None] * vt[..., None, :]            # (B,H,N,N)
+            y = jnp.einsum("bhn,bhnm->bhm", rt,
+                           S + u[None, :, :, None] * kv)
+            S = wt[..., :, None] * S + kv
+            return S, y
+
+        rs, ks, vs, ws = [t.transpose(1, 0, 2, 3).astype(jnp.float32)
+                          for t in (r, k, v, w)]                # (S,B,H,N)
+        S_fin, ys = jax.lax.scan(step, S0, (rs, ks, vs, ws))
+        y = ys.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+
+    # group-norm per head (approximated by rmsnorm over full dim)
+    y = L.rmsnorm({"scale": params["ln_x"]}, y) * g
+    out = L.dense({"w": params["wo"]}, y, quant, qat)
+    out = constrain(out, rules, "batch", "seq", "embed")
+    new_state = {"S": S_fin, "xprev": x[:, -1].astype(jnp.float32)}
+    return out, new_state
+
+
+def rwkv_cmix_desc(d_model: int, d_ff: int, dtype=jnp.float32):
+    return {
+        "mu_k": ParamDesc((d_model,), ("embed",), "zeros", dtype=dtype),
+        "mu_r": ParamDesc((d_model,), ("embed",), "zeros", dtype=dtype),
+        "wk": ParamDesc((d_model, d_ff), ("embed", "mlp"), dtype=dtype),
+        "wr": ParamDesc((d_model, d_model), ("embed", "heads"), dtype=dtype),
+        "wv": ParamDesc((d_ff, d_model), ("mlp", "embed"), dtype=dtype),
+    }
+
+
+def rwkv_cmix(params, x, rules: ShardingRules, quant: QuantConfig,
+              xprev=None, qat: bool = False):
+    b, s, d = x.shape
+    xp = (jnp.zeros((b, d), x.dtype) if xprev is None
+          else xprev.astype(x.dtype))
+    x_shift = jnp.concatenate([xp[:, None], x[:, :-1]], axis=1)
+    xx = x_shift - x
+    xk = x + xx * params["mu_k"]
+    xr = x + xx * params["mu_r"]
+    k = L.dense({"w": params["wk"]}, xk, quant, qat)
+    k = jnp.square(jax.nn.relu(k))
+    kv = L.dense({"w": params["wv"]}, k, quant, qat)
+    out = jax.nn.sigmoid(L.dense({"w": params["wr"]}, xr, quant, qat)) * kv
+    return out, x[:, -1].astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-lite (hymba's SSM branch)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_model: int
+    d_inner: int
+    n_state: int = 16
+    conv_k: int = 4
+    dt_rank: int = 32
+
+
+def mamba_desc(cfg: MambaConfig, dtype=jnp.float32):
+    Di, Ns = cfg.d_inner, cfg.n_state
+    return {
+        "in_proj": ParamDesc((cfg.d_model, 2 * Di), ("embed", "heads"),
+                             dtype=dtype),
+        "conv_w": ParamDesc((cfg.conv_k, Di), (None, "heads"), scale=0.5,
+                            dtype=dtype),
+        "x_proj": ParamDesc((Di, cfg.dt_rank + 2 * Ns), ("heads", None),
+                            dtype=dtype),
+        "dt_proj": ParamDesc((cfg.dt_rank, Di), (None, "heads"), scale=0.01,
+                             dtype=dtype),
+        "dt_bias": ParamDesc((Di,), ("heads",), "zeros", dtype=dtype),
+        "a_log": ParamDesc((Di, Ns), ("heads", None), "zeros", dtype=dtype),
+        "d_skip": ParamDesc((Di,), ("heads",), "ones", dtype=dtype),
+        "out_proj": ParamDesc((Di, cfg.d_model), ("heads", "embed"),
+                              dtype=dtype),
+    }
+
+
+def mamba(params, x, cfg: MambaConfig, rules: ShardingRules,
+          quant: QuantConfig, state=None, qat: bool = False):
+    """x: (B,S,D). state: dict(h=(B,Di,Ns), conv=(B,k-1,Di)) or None."""
+    b, s, _ = x.shape
+    Di, Ns, K = cfg.d_inner, cfg.n_state, cfg.conv_k
+    xz = L.dense({"w": params["in_proj"]}, x, quant, qat)
+    xi, z = jnp.split(xz, 2, axis=-1)                           # (B,S,Di)
+
+    conv_prev = (jnp.zeros((b, K - 1, Di), x.dtype) if state is None
+                 else state["conv"].astype(x.dtype))
+    xin = jnp.concatenate([conv_prev, xi], axis=1)              # (B,S+K-1,Di)
+    # depthwise causal conv1d
+    idx = jnp.arange(s)[:, None] + jnp.arange(K)[None, :]
+    windows = xin[:, idx]                                       # (B,S,K,Di)
+    xc = jnp.einsum("bskd,kd->bsd", windows, params["conv_w"])
+    xc = jax.nn.silu(xc)
+
+    proj = L.dense({"w": params["x_proj"]}, xc, quant, qat)
+    dt_in, Bm, Cm = jnp.split(proj, [cfg.dt_rank, cfg.dt_rank + Ns], axis=-1)
+    dt = jax.nn.softplus(dt_in @ params["dt_proj"] + params["dt_bias"])
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))           # (Di,Ns)
+
+    h0 = (jnp.zeros((b, Di, Ns), jnp.float32) if state is None
+          else state["h"])
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp
+        dA = jnp.exp(dtt[..., None] * A[None])                  # (B,Di,Ns)
+        dBx = (dtt * xt)[..., None] * Bt[:, None, :]
+        h = h * dA + dBx
+        y = jnp.einsum("bdn,bn->bd", h, Ct)
+        return h, y
+
+    seq = (xc.transpose(1, 0, 2).astype(jnp.float32),
+           dt.transpose(1, 0, 2).astype(jnp.float32),
+           Bm.transpose(1, 0, 2).astype(jnp.float32),
+           Cm.transpose(1, 0, 2).astype(jnp.float32))
+    h_fin, ys = jax.lax.scan(step, h0, seq)
+    y = ys.transpose(1, 0, 2).astype(x.dtype)
+    y = y + xc * params["d_skip"]
+    y = y * jax.nn.silu(z)
+    out = L.dense({"w": params["out_proj"]}, y, quant, qat)
+    new_state = {"h": h_fin, "conv": xin[:, -(K - 1):].astype(jnp.float32)}
+    return constrain(out, rules, "batch", "seq", "embed"), new_state

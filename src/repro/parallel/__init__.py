@@ -1,0 +1,3 @@
+from repro.parallel.sharding import (ShardingRules, DEFAULT_RULES,
+                                     SEQ_PARALLEL_RULES, WIDE_FSDP_RULES,
+                                     constrain)

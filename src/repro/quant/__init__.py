@@ -1,0 +1,6 @@
+from repro.quant.quantize import (QuantConfig, BF16, INT8, APPROX_LUT,
+                                  APPROX_DEFICIT, APPROX_STAGE1, fake_quant,
+                                  fake_quant_per_channel, quantize,
+                                  quantize_dynamic, abs_max_scale)
+from repro.quant.matmul import (quantized_matmul, integer_matmul,
+                                int8_matmul, enable_pallas)

@@ -1,0 +1,269 @@
+"""Quantized matmul execution backends.
+
+All integer backends share the contract:
+    out_int32[m, n] = sum_k  P(x_q[m, k], w_q[k, n])
+where P is the (possibly approximate) signed product of two int8 values in
+[-127, 127]. Backends:
+
+  int8_exact      P = a * b                          (MXU-native)
+  approx_lut      P = sign * LUT_u8(|a|, |b|)        (paper-faithful, B1)
+  approx_deficit  P = a*b - sign * deficit(|a|,|b|)  (bit-identical to LUT;
+                                                      gather-free, B2 — the
+                                                      Pallas kernel's math)
+  approx_stage1   P = a*b - sign * stage1_err(|a|,|b|) (beyond-paper: keeps
+                  only the rank-1-factorizable stage-1 compressor errors ->
+                  evaluates as 1 + ~6 extra MXU matmuls, see DESIGN.md §3)
+
+Backward is always the straight-through estimator (exact float grads), which
+is how the paper trains its Keras models (forward substitution only).
+"""
+from __future__ import annotations
+
+from functools import lru_cache, partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import luts
+from repro.core.multiplier import MultiplierConfig, proposed_multiplier
+from repro.quant.quantize import QuantConfig, QMAX, abs_max_scale, quantize
+
+# Stage-1 compressor sites of the pinned tree: (column, a-row window start,
+# b-col window start). Window length is always 4; site fires iff
+# a_bits[r:r+4] and b_bits[c-r-3 ... ] are all ones. Derived from
+# multiplier.STAGE1_PLAN with head input selection.
+STAGE1_SITES = (
+    (5, 0, 2), (6, 0, 3), (7, 0, 4), (7, 4, 0),
+    (8, 1, 4), (9, 2, 4), (10, 3, 4),
+)
+
+
+def _err_lut_i16(mult_cfg: MultiplierConfig) -> np.ndarray:
+    """(65536,) int16 signed-product error table indexed by
+    (a & 0xFF) * 256 + (b & 0xFF) for signed int8 a, b."""
+    return _err_lut_cached(mult_cfg.key, mult_cfg)
+
+
+@lru_cache(maxsize=16)
+def _err_lut_cached(key: str, mult_cfg: MultiplierConfig) -> np.ndarray:
+    signed = luts.signed_product_lut(mult_cfg)       # (256,256) int32
+    vals = np.arange(256)
+    sval = np.where(vals < 128, vals, vals - 256)
+    exact = sval[:, None] * sval[None, :]
+    return (signed - exact).astype(np.int16).reshape(-1)
+
+
+def _mult_cfg(cfg: QuantConfig) -> MultiplierConfig:
+    return MultiplierConfig(name=f"{cfg.structure}[{cfg.multiplier}]",
+                            compressor=cfg.multiplier,
+                            structure=cfg.structure)
+
+
+# ---------------------------------------------------------------------------
+# Integer matmul kernels (jnp reference implementations; the Pallas kernel
+# in repro.kernels overrides approx paths on TPU / in benchmarks)
+# ---------------------------------------------------------------------------
+
+def int8_matmul(x_q: jax.Array, w_q: jax.Array) -> jax.Array:
+    return jax.lax.dot_general(
+        x_q, w_q, (((x_q.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+
+def _approx_error_lut(x_q, w_q, err_flat, chunk_elems=1 << 22):
+    """sum_k E[x[m,k], w[k,n]] via chunked gather (reference path)."""
+    m, k = x_q.shape
+    n = w_q.shape[1]
+    xi = x_q.astype(jnp.uint8).astype(jnp.int32)
+    wi = w_q.astype(jnp.uint8).astype(jnp.int32)
+    tbl = jnp.asarray(err_flat)
+    chunk_m = max(1, min(m, chunk_elems // max(1, k * n)))
+    pad = (-m) % chunk_m
+    xi = jnp.pad(xi, ((0, pad), (0, 0)))
+
+    def body(xc):
+        idx = xc[:, :, None] * 256 + wi[None, :, :]
+        return jnp.take(tbl, idx, axis=0).astype(jnp.int32).sum(axis=1)
+
+    out = jax.lax.map(body, xi.reshape(-1, chunk_m, k))
+    return out.reshape(-1, n)[:m]
+
+
+def approx_matmul_lut(x_q, w_q, cfg: QuantConfig) -> jax.Array:
+    """Bit-exact approximate matmul via the signed error LUT."""
+    err = _err_lut_i16(_mult_cfg(cfg))
+    return int8_matmul(x_q, w_q) + _approx_error_lut(x_q, w_q, err)
+
+
+def approx_matmul_deficit(x_q, w_q, cfg: QuantConfig) -> jax.Array:
+    """Bit-exact approximate matmul via deficit planes (gather-free).
+
+    Reference jnp implementation of the Pallas kernel's math; chunked over
+    rows to bound the (m, k, n) intermediate.
+    """
+    from repro.core import deficit as D
+    mult_cfg = _mult_cfg(cfg)
+    m, k = x_q.shape
+    n = w_q.shape[1]
+    xs = x_q.astype(jnp.int32)
+    ws = w_q.astype(jnp.int32)
+    xmag = jnp.abs(xs)
+    wmag = jnp.abs(ws)
+    sgn = None  # applied per chunk
+
+    chunk_m = max(1, min(m, (1 << 20) // max(1, k * n)))
+    pad = (-m) % chunk_m
+    xmag_p = jnp.pad(xmag, ((0, pad), (0, 0)))
+    xsgn_p = jnp.pad(jnp.sign(xs), ((0, pad), (0, 0)))
+
+    wsgn = jnp.sign(ws)
+
+    def body(args):
+        xc, sc = args
+        a = xc[:, :, None]           # (cm, k, 1)
+        b = wmag.T[None, :, :].transpose(0, 2, 1)  # (1, k, n)
+        prod = D.approx_product(a, jnp.broadcast_to(b, (xc.shape[0], k, n)),
+                                mult_cfg)
+        signed = prod * (sc[:, :, None] * wsgn[None, :, :])
+        return signed.sum(axis=1).astype(jnp.int32)
+
+    out = jax.lax.map(body, (xmag_p.reshape(-1, chunk_m, k),
+                             xsgn_p.reshape(-1, chunk_m, k)))
+    return out.reshape(-1, n)[:m]
+
+
+def _window_and(mag: jax.Array, start: int) -> jax.Array:
+    """AND of bits [start, start+4) of |v| as 0/1 int8."""
+    m = mag.astype(jnp.int32)
+    out = jnp.ones_like(m)
+    for i in range(start, start + 4):
+        out = out * ((m >> i) & 1)
+    return out.astype(jnp.int8)
+
+
+def approx_matmul_stage1(x_q, w_q, cfg: QuantConfig) -> jax.Array:
+    """Beyond-paper re-approximation: exact matmul minus the rank-1
+    stage-1 site corrections (each an extra int8 matmul on the MXU)."""
+    out = int8_matmul(x_q, w_q)
+    xs = x_q.astype(jnp.int32)
+    ws = w_q.astype(jnp.int32)
+    xsgn = jnp.sign(xs).astype(jnp.int8)
+    wsgn = jnp.sign(ws).astype(jnp.int8)
+    xmag = jnp.abs(xs)
+    wmag = jnp.abs(ws)
+    for col, ra, rb in STAGE1_SITES:
+        u = _window_and(xmag, ra) * xsgn          # (m, k) in {-1,0,1}
+        v = _window_and(wmag, rb) * wsgn          # (k, n)
+        corr = int8_matmul(u, v)
+        out = out - (corr << col)
+    return out
+
+
+def approx_matmul_stage1_fused(x_q, w_q, cfg: QuantConfig) -> jax.Array:
+    """§Perf-fused stage-1 correction: sites sharing an operand window are
+    merged by weighting the other side, collapsing 7 correction matmuls to
+    3 (1 + 3 = 4 total vs 1 + 7 = 8). Bit-identical to approx_matmul_stage1:
+      sites (5,0,2),(6,0,3),(7,0,4)  share the a-window rows 0-3
+      sites (8,1,4),(9,2,4),(10,3,4) share the b-window rows 4-7
+    Weighted features fit bf16 exactly (|value| <= 1792 < 2^11; fp32 accum).
+    """
+    out = int8_matmul(x_q, w_q)
+    xs = x_q.astype(jnp.int32)
+    ws = w_q.astype(jnp.int32)
+    xsgn = jnp.sign(xs)
+    wsgn = jnp.sign(ws)
+    xmag = jnp.abs(xs)
+    wmag = jnp.abs(ws)
+
+    def f32mm(u, v):
+        return jax.lax.dot_general(
+            u.astype(jnp.bfloat16), v.astype(jnp.bfloat16),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(jnp.int32)
+
+    # group A: shared u = AND(a bits 0..3); v = sum_c 2^c * v_c
+    uA = _window_and(xmag, 0).astype(jnp.int32) * xsgn
+    vA = sum((_window_and(wmag, rb).astype(jnp.int32) << col)
+             for col, ra, rb in STAGE1_SITES[:3]) * wsgn
+    out = out - f32mm(uA, vA)
+    # singleton site (7, 4, 0)
+    col, ra, rb = STAGE1_SITES[3]
+    out = out - (int8_matmul(_window_and(xmag, ra) * xsgn.astype(jnp.int8),
+                             _window_and(wmag, rb) * wsgn.astype(jnp.int8))
+                 << col)
+    # group B: shared v = AND(b bits 4..7); u = sum_c 2^c * u_c
+    uB = sum((_window_and(xmag, ra).astype(jnp.int32) << col)
+             for col, ra, rb in STAGE1_SITES[4:]) * xsgn
+    vB = _window_and(wmag, 4).astype(jnp.int32) * wsgn
+    out = out - f32mm(uB, vB)
+    return out
+
+
+BACKENDS = {
+    "int8_exact": lambda x, w, cfg: int8_matmul(x, w),
+    "approx_lut": approx_matmul_lut,
+    "approx_deficit": approx_matmul_deficit,
+    "approx_stage1": approx_matmul_stage1,
+    "approx_stage1_fused": approx_matmul_stage1_fused,
+}
+
+
+def integer_matmul(x_q, w_q, cfg: QuantConfig) -> jax.Array:
+    if cfg.backend in ("approx_lut", "approx_deficit") and _use_pallas():
+        from repro.kernels import ops as kops
+        return kops.approx_matmul(x_q, w_q, cfg)
+    return BACKENDS[cfg.backend](x_q, w_q, cfg)
+
+
+_PALLAS = {"enabled": False}
+
+
+def _use_pallas() -> bool:
+    return _PALLAS["enabled"]
+
+
+def enable_pallas(flag: bool = True):
+    """Route approx backends through the Pallas kernel (interpret=True on
+    CPU). Off by default: the jnp reference path is faster in interpret
+    mode; benchmarks and kernel tests enable it explicitly."""
+    _PALLAS["enabled"] = flag
+
+
+# ---------------------------------------------------------------------------
+# Float-in/float-out quantized matmul with STE backward
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def quantized_matmul(x: jax.Array, w: jax.Array, cfg: QuantConfig):
+    """y = dequant(integer_matmul(q(x), q(w))). x: (..., k), w: (k, n)."""
+    return _qmm_fwd(x, w, cfg)[0]
+
+
+def _qmm_fwd(x, w, cfg: QuantConfig):
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    sx = abs_max_scale(x2)                        # per-tensor activation scale
+    if cfg.per_channel:
+        sw = abs_max_scale(w, axis=0, keepdims=True)   # (1, n)
+    else:
+        sw = abs_max_scale(w)
+    x_q = quantize(x2, sx)
+    w_q = quantize(w, sw)
+    y = integer_matmul(x_q, w_q, cfg).astype(jnp.float32) * (sx * sw)
+    y = y.reshape(*lead, w.shape[1]).astype(x.dtype)
+    return y, (x, w)
+
+
+def _qmm_bwd(cfg, res, g):
+    x, w = res
+    lead = x.shape[:-1]
+    g2 = g.reshape(-1, w.shape[1]).astype(jnp.float32)
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    dx = (g2 @ w.astype(jnp.float32).T).reshape(x.shape).astype(x.dtype)
+    dw = (x2.T @ g2).astype(w.dtype)
+    return dx, dw
+
+
+quantized_matmul.defvjp(_qmm_fwd, _qmm_bwd)

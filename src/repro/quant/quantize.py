@@ -1,0 +1,95 @@
+"""Symmetric int8 quantization with straight-through-estimator training.
+
+Range is clamped to [-127, 127] (not -128) so magnitudes fit the unsigned
+8x8 core of the approximate multiplier via sign-magnitude (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+QMAX = 127.0
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Quantized-execution config for dense/conv layers.
+
+    backend:
+      'bf16'           no quantization (default training dtype)
+      'int8_exact'     W8A8 symmetric, exact integer products
+      'approx_lut'     W8A8, products via the approximate-multiplier LUT
+      'approx_deficit' W8A8, products via the deficit-plane formulation
+                       (bit-identical to approx_lut; Pallas kernel on TPU)
+      'approx_stage1'  beyond-paper: exact MXU matmul minus stage-1 rank-1
+                       corrections (a cheaper, more accurate re-approximation)
+    """
+    backend: str = "bf16"
+    multiplier: str = "proposed"       # compressor design for approx paths
+    structure: str = "proposed"        # multiplier structure
+    per_channel: bool = True           # weight scales per output channel
+    stochastic_round: bool = False
+
+    @property
+    def is_quantized(self) -> bool:
+        return self.backend != "bf16"
+
+    @property
+    def is_approx(self) -> bool:
+        return self.backend.startswith("approx")
+
+
+BF16 = QuantConfig()
+INT8 = QuantConfig(backend="int8_exact")
+APPROX_LUT = QuantConfig(backend="approx_lut")
+APPROX_DEFICIT = QuantConfig(backend="approx_deficit")
+APPROX_STAGE1 = QuantConfig(backend="approx_stage1")
+
+
+def abs_max_scale(x: jax.Array, axis=None, keepdims=True) -> jax.Array:
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=keepdims)
+    return jnp.maximum(amax, 1e-8) / QMAX
+
+
+def quantize(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """Symmetric quantization to int8 in [-127, 127]."""
+    q = jnp.round(x / scale)
+    return jnp.clip(q, -QMAX, QMAX).astype(jnp.int8)
+
+
+def quantize_dynamic(x: jax.Array, axis=None):
+    """(int8 values, scale). Per-tensor if axis is None else per-axis."""
+    scale = abs_max_scale(x, axis=axis, keepdims=True)
+    return quantize(x, scale), scale
+
+
+@jax.custom_vjp
+def fake_quant(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """Quantize-dequantize with straight-through gradients (QAT)."""
+    q = jnp.clip(jnp.round(x / scale), -QMAX, QMAX)
+    return q * scale
+
+
+def _fq_fwd(x, scale):
+    return fake_quant(x, scale), (x, scale)
+
+
+def _fq_bwd(res, g):
+    x, scale = res
+    # STE with range masking: gradient passes where |x| within range
+    mask = (jnp.abs(x) <= scale * QMAX).astype(g.dtype)
+    return g * mask, jnp.zeros_like(scale)
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+def fake_quant_per_channel(w: jax.Array, axis: int = -1) -> jax.Array:
+    """QAT fake-quant with per-output-channel scales."""
+    red = tuple(i for i in range(w.ndim) if i != (axis % w.ndim))
+    scale = abs_max_scale(w, axis=red, keepdims=True)
+    return fake_quant(w, scale)

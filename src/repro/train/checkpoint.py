@@ -1,0 +1,142 @@
+"""Fault-tolerant checkpointing (no orbax in this environment — built here).
+
+Format: one directory per step containing
+  manifest.json : tree structure, shapes, dtypes, crc32 per tensor, step,
+                  mesh-independent (arrays saved UNSHARDED logical state)
+  data.bin      : concatenated raw little-endian tensor bytes
+
+Fault-tolerance properties:
+  * atomic publish   — written to `<dir>.tmp`, fsync'd, then os.rename
+  * corruption check — crc32 per tensor validated on load; a bad checkpoint
+                       is skipped and the previous one restored
+  * keep-k           — older steps garbage-collected after publish
+  * async            — save() can run in a background thread (the train loop
+                       only blocks on the previous save)
+  * elastic restore  — arrays are saved unsharded; restore() re-applies the
+                       current mesh's shardings, so a job can restart on a
+                       different device count (elastic scaling)
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import zlib
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return [("/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path), leaf) for path, leaf in leaves], \
+        jax.tree_util.tree_structure(tree)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, keep: int = 3,
+                 async_save: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree: Any):
+        """Snapshot `tree` at `step`. Blocks only on a previous async save."""
+        self.wait()
+        # materialize host copies before handing to the writer thread
+        flat, _ = _flatten(tree)
+        host = [(name, np.asarray(jax.device_get(x))) for name, x in flat]
+        if self.async_save:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host):
+        final = self.dir / f"step_{step:010d}"
+        tmp = self.dir / f"step_{step:010d}.tmp"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        manifest = {"step": step, "tensors": []}
+        with open(tmp / "data.bin", "wb") as f:
+            off = 0
+            for name, arr in host:
+                raw = np.ascontiguousarray(arr).tobytes()
+                manifest["tensors"].append({
+                    "name": name, "shape": list(arr.shape),
+                    "dtype": str(arr.dtype), "offset": off,
+                    "nbytes": len(raw), "crc32": zlib.crc32(raw)})
+                f.write(raw)
+                off += len(raw)
+            f.flush()
+            os.fsync(f.fileno())
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)                      # atomic publish
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:010d}", ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self):
+        out = []
+        for p in self.dir.glob("step_*"):
+            if p.suffix == ".tmp" or not (p / "manifest.json").exists():
+                continue
+            out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like: Any, shardings: Any = None):
+        """Restore into the structure of `like` (arrays or SDS). Verifies
+        crc32; raises ValueError on corruption."""
+        d = self.dir / f"step_{step:010d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        blob = (d / "data.bin").read_bytes()
+        by_name = {t["name"]: t for t in manifest["tensors"]}
+        flat, _ = _flatten(like)
+        shard_flat = None
+        if shardings is not None:
+            shard_flat = [s for _, s in _flatten(shardings)[0]]
+        out = []
+        for i, (name, leaf) in enumerate(flat):
+            t = by_name[name]
+            raw = blob[t["offset"]:t["offset"] + t["nbytes"]]
+            if zlib.crc32(raw) != t["crc32"]:
+                raise ValueError(f"checkpoint corruption in tensor {name}")
+            arr = np.frombuffer(raw, dtype=t["dtype"]).reshape(t["shape"])
+            if shard_flat is not None:
+                arr = jax.device_put(arr, shard_flat[i])
+            out.append(arr)
+        leaves, treedef = jax.tree_util.tree_flatten(like)
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def restore_latest(self, like: Any, shardings: Any = None):
+        """Restore the newest valid checkpoint, skipping corrupt ones."""
+        for step in reversed(self.all_steps()):
+            try:
+                return step, self.restore(step, like, shardings)
+            except (ValueError, KeyError, json.JSONDecodeError) as e:
+                print(f"[ckpt] step {step} unusable ({e}); trying previous")
+        return None, None

@@ -1,0 +1,100 @@
+"""Small supervised training helpers for the paper's application models
+(classification on synthetic digits, denoising on synthetic textures)."""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import synthetic
+from repro.models import cnn as CNN
+from repro.nn import module as M
+from repro.optim import adamw
+from repro.quant.quantize import QuantConfig, BF16
+
+
+def train_classifier(descs, apply_fn, *, steps=300, batch=64, lr=2e-3,
+                     n_train=5000, seed=0, qat=False,
+                     quant: QuantConfig = BF16):
+    """Train on synthetic digits (paper §5.1 uses 5000 train / 500 test)."""
+    imgs, labels = synthetic.digits(n_train, seed=seed)
+    params = M.init_params(descs, jax.random.PRNGKey(seed))
+    ocfg = adamw.AdamWConfig(lr=lr, weight_decay=0.0)
+    opt = adamw.init(descs, ocfg)
+
+    def loss_fn(p, x, y):
+        logits = apply_fn(p, x, quant, qat)
+        one = jax.nn.log_softmax(logits.astype(jnp.float32))
+        return -jnp.take_along_axis(one, y[:, None], 1).mean()
+
+    @jax.jit
+    def step(p, o, x, y):
+        l, g = jax.value_and_grad(loss_fn)(p, x, y)
+        p, o = adamw.update(g, o, p, ocfg)
+        return p, o, l
+
+    rng = np.random.default_rng(seed)
+    for i in range(steps):
+        idx = rng.integers(0, n_train, batch)
+        params, opt, l = step(params, opt, jnp.asarray(imgs[idx]),
+                              jnp.asarray(labels[idx]))
+    return params
+
+
+def eval_classifier(params, apply_fn, quant: QuantConfig, *, n_test=500,
+                    seed=1, batch=50) -> float:
+    imgs, labels = synthetic.digits(n_test, seed=seed)
+    fn = jax.jit(functools.partial(apply_fn, quant=quant, qat=False))
+    correct = 0
+    for i in range(0, n_test, batch):
+        logits = fn(params, jnp.asarray(imgs[i:i + batch]))
+        correct += int((np.asarray(jnp.argmax(logits, -1))
+                        == labels[i:i + batch]).sum())
+    return 100.0 * correct / n_test
+
+
+def train_denoiser(cfg: CNN.FFDNetConfig, *, steps=200, batch=8, lr=1e-3,
+                   size=64, sigmas=(15., 25., 50.), seed=0, qat=False,
+                   quant: QuantConfig = BF16):
+    descs = CNN.ffdnet_descs(cfg)
+    params = M.init_params(descs, jax.random.PRNGKey(seed))
+    ocfg = adamw.AdamWConfig(lr=lr, weight_decay=0.0)
+    opt = adamw.init(descs, ocfg)
+    clean = synthetic.textures(256, size=size, seed=seed)
+
+    def loss_fn(p, noisy, target, sg):
+        out = CNN.ffdnet_apply(p, noisy, sg, cfg, quant, qat)
+        return jnp.mean((out - target) ** 2)
+
+    @jax.jit
+    def step(p, o, noisy, target, sg):
+        l, g = jax.value_and_grad(loss_fn)(p, noisy, target, sg)
+        p, o = adamw.update(g, o, p, ocfg)
+        return p, o, l
+
+    rng = np.random.default_rng(seed)
+    for i in range(steps):
+        idx = rng.integers(0, clean.shape[0], batch)
+        sig = rng.choice(sigmas, batch).astype(np.float32)
+        tgt = clean[idx]
+        noisy = tgt + (sig[:, None, None, None] / 255.0) * \
+            rng.standard_normal(tgt.shape).astype(np.float32)
+        params, opt, l = step(params, opt, jnp.asarray(noisy),
+                              jnp.asarray(tgt),
+                              jnp.asarray(sig / 255.0))
+    return params
+
+
+def eval_denoiser(params, cfg: CNN.FFDNetConfig, quant: QuantConfig, *,
+                  sigma=25.0, n=16, size=64, seed=3):
+    clean = synthetic.textures(n, size=size, seed=seed)
+    noisy = synthetic.add_noise(clean, sigma, seed=seed + 1)
+    fn = jax.jit(functools.partial(CNN.ffdnet_apply, cfg=cfg, quant=quant))
+    out = fn(params, jnp.asarray(noisy), jnp.float32(sigma / 255.0))
+    out = np.asarray(jnp.clip(out, 0, 1))
+    return (float(CNN.psnr(jnp.asarray(out), jnp.asarray(clean))),
+            float(CNN.ssim(jnp.asarray(out), jnp.asarray(clean))),
+            float(CNN.psnr(jnp.asarray(noisy), jnp.asarray(clean))))

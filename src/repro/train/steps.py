@@ -1,0 +1,71 @@
+"""Train / serve step builders shared by the real loops and the dry-run."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer_lm as TLM
+from repro.models.transformer_lm import ArchConfig
+from repro.optim import adamw
+from repro.parallel.sharding import ShardingRules, DEFAULT_RULES
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
+                    rules: ShardingRules = DEFAULT_RULES,
+                    num_microbatches: int = 1, qat: bool = False,
+                    accum_dtype=jnp.float32):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def loss_fn(params, batch):
+        return TLM.forward_loss(params, batch, cfg, rules, qat=qat,
+                                training=True)
+
+    def train_step(params, opt_state, batch):
+        if num_microbatches > 1:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(num_microbatches, b // num_microbatches,
+                                 *x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc_body(carry, mbatch):
+                gacc, lacc = carry
+                loss, g = jax.value_and_grad(loss_fn)(params, mbatch)
+                gacc = jax.tree.map(
+                    lambda a, b: a + b.astype(accum_dtype), gacc, g)
+                return (gacc, lacc + loss), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params)
+            (grads, loss), _ = jax.lax.scan(acc_body, (zeros, 0.0), mb)
+            grads = jax.tree.map(lambda g: g / num_microbatches, grads)
+            loss = loss / num_microbatches
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        new_params, new_opt = adamw.update(grads, opt_state, params, opt_cfg)
+        return new_params, new_opt, {"loss": loss}
+
+    return train_step
+
+
+def make_serve_step(cfg: ArchConfig, rules: ShardingRules = DEFAULT_RULES,
+                    greedy: bool = True):
+    """(params, caches, token, pos) -> (next_token, caches, logits_max).
+
+    One decode step over a batch of requests with a KV cache of the cell's
+    seq_len — the 'decode_*' / 'long_*' dry-run target.
+    """
+
+    def serve_step(params, caches, token, pos, enc=None):
+        logits, caches = TLM.decode_step(params, token, pos, cfg, caches,
+                                         rules, enc=enc)
+        if cfg.n_codebooks > 1:
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        else:
+            nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return nxt, caches
+
+    return serve_step

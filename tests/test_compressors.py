@@ -1,0 +1,59 @@
+"""Compressor-level tests: paper Table 1 + stated error probabilities."""
+import numpy as np
+import pytest
+
+from repro.core import compressors as C
+
+
+def test_proposed_truth_table_matches_paper_table1():
+    """Paper Table 1: proposed compressor = min(sum, 3) with the single
+    error combination at all-ones (4 -> 3)."""
+    for idx in range(16):
+        x = [(idx >> k) & 1 for k in range(4)]
+        s, carry = C.compress("proposed", *x)
+        got = int(s) + 2 * int(carry)
+        want = min(sum(x), 3)
+        assert got == want, (x, got, want)
+
+
+def test_proposed_gate_level_equals_truth_table():
+    """Paper Eq. (1)-(3) literal gate netlist == the truth table."""
+    xs = np.array([[(i >> k) & 1 for k in range(4)] for i in range(16)])
+    s_tt, c_tt = C.compress("proposed", xs[:, 0], xs[:, 1], xs[:, 2], xs[:, 3])
+    s_gl, c_gl = C.proposed_gate_level(xs[:, 0], xs[:, 1], xs[:, 2], xs[:, 3])
+    np.testing.assert_array_equal(s_tt, s_gl)
+    np.testing.assert_array_equal(c_tt, c_gl)
+
+
+def test_single_error_probability():
+    d = C.DESIGNS["proposed"]
+    assert d.error_combos == 1
+    assert d.error_prob_num == 1  # P(1/256)
+
+
+@pytest.mark.parametrize("name,prob", [
+    ("proposed", 1),
+    ("single_error", 1),
+    ("design12", 19),
+    ("design15", 16),
+    ("design16_d2", 55),
+    ("design13", 70),
+    ("design17_d2", 4),
+])
+def test_stated_error_probabilities(name, prob):
+    """Each design's error probability matches the paper's stated P(x/256)."""
+    assert C.DESIGNS[name].error_prob_num == prob
+
+
+def test_combo_probabilities_sum_to_one():
+    assert int(C.COMBO_PROB.sum()) == 256
+
+
+def test_compress_vectorized_jax():
+    import jax.numpy as jnp
+    x = jnp.array([1, 1, 0]), jnp.array([1, 1, 1]), \
+        jnp.array([1, 0, 0]), jnp.array([1, 1, 0])
+    s, c = C.compress("proposed", *x)
+    # sums: 4 -> 3 (1,1); 3 -> (1,1); 1 -> (1,0)
+    np.testing.assert_array_equal(np.asarray(s), [1, 1, 1])
+    np.testing.assert_array_equal(np.asarray(c), [1, 1, 0])

@@ -1,0 +1,19 @@
+"""Examples must stay runnable (quickstart is fast enough for CI)."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def test_quickstart_runs():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    out = subprocess.run([sys.executable, str(ROOT / "examples" /
+                                              "quickstart.py")],
+                         env=env, capture_output=True, text=True,
+                         timeout=300)
+    assert out.returncode == 0, out.stderr[-1500:]
+    assert "identity OK" in out.stdout
+    assert "ER=6.940%" in out.stdout

@@ -1,0 +1,71 @@
+"""Validate the trip-count-corrected HLO cost walker against ground truth:
+a scanned matmul stack must cost (trip count) x (one body), matching the
+same program unrolled — exactly where XLA's builtin cost_analysis fails."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_costs import HloCost
+
+M = N = K = 64
+LAYERS = 7
+
+
+def _lower(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_scan_trip_count_correction():
+    ws = jnp.ones((LAYERS, K, K), jnp.float32)
+    x = jnp.ones((M, K), jnp.float32)
+
+    def scanned(x, ws):
+        def body(h, w):
+            return h @ w, None
+        out, _ = jax.lax.scan(body, x, ws)
+        return out
+
+    def unrolled(x, ws):
+        h = x
+        for i in range(LAYERS):
+            h = h @ ws[i]
+        return h
+
+    flops_one = 2 * M * K * K
+    hs = HloCost(_lower(scanned, x, ws))
+    hu = HloCost(_lower(unrolled, x, ws))
+    assert hs.flops == pytest.approx(LAYERS * flops_one, rel=0.01), \
+        (hs.flops, LAYERS * flops_one)
+    assert hu.flops == pytest.approx(LAYERS * flops_one, rel=0.01)
+    # builtin analysis undercounts the scanned version (sanity check of the
+    # premise; if XLA ever fixes this, the walker stays correct)
+    builtin = jax.jit(scanned).lower(x, ws).compile().cost_analysis()
+    assert builtin["flops"] <= hs.flops + 1
+
+
+def test_nested_scan_multiplies():
+    x = jnp.ones((M, K), jnp.float32)
+    w = jnp.ones((K, K), jnp.float32)
+    inner_n, outer_n = 3, 5
+
+    def fn(x, w):
+        def outer(h, _):
+            def inner(g, _):
+                return g @ w, None
+            h, _ = jax.lax.scan(inner, h, None, length=inner_n)
+            return h, None
+        h, _ = jax.lax.scan(outer, x, None, length=outer_n)
+        return h
+
+    hc = HloCost(_lower(fn, x, w))
+    want = 2 * M * K * K * inner_n * outer_n
+    assert hc.flops == pytest.approx(want, rel=0.01), (hc.flops, want)
+
+
+def test_dot_flops_and_bytes_shapes():
+    a = jnp.ones((32, 128), jnp.bfloat16)
+    b = jnp.ones((128, 16), jnp.bfloat16)
+    hc = HloCost(_lower(lambda a, b: a @ b, a, b))
+    assert hc.flops == pytest.approx(2 * 32 * 128 * 16, rel=0.01)
+    assert hc.hbm_bytes >= (32 * 128 + 128 * 16 + 32 * 16) * 2

@@ -1,0 +1,138 @@
+"""Multiplier-level reproduction gate (paper Table 2) + structural tests."""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compressors as C
+from repro.core import deficit, luts, metrics
+from repro.core import multiplier as M
+
+
+@pytest.fixture(scope="module")
+def exact_table():
+    return metrics.exhaustive_exact()
+
+
+def test_exact_structure_is_exact(exact_table):
+    t = M.exhaustive_products(M.exact_multiplier())
+    np.testing.assert_array_equal(t, exact_table)
+
+
+def test_paper_table2_proposed(exact_table):
+    """Reproduction gate: NMED = 0.046 %, MRED = 0.109 % to all printed
+    digits; ER within 0.06 pp of the paper's 6.994 % (see DESIGN.md §8)."""
+    t = M.exhaustive_products(M.proposed_multiplier("proposed"))
+    m = metrics.evaluate(t, exact_table)
+    assert round(m.nmed_pct, 3) == 0.046
+    assert round(m.mred_pct, 3) == 0.109
+    assert abs(m.er_pct - 6.994) < 0.06
+
+
+def test_single_error_designs_identical(exact_table):
+    """All single-error (all-ones) compressors are the same boolean function
+    -> identical multiplier error rows, as in paper Table 2."""
+    t1 = M.exhaustive_products(M.proposed_multiplier("proposed"))
+    t2 = M.exhaustive_products(M.proposed_multiplier("single_error"))
+    np.testing.assert_array_equal(t1, t2)
+
+
+@pytest.mark.parametrize("comp,er,nmed,mred,tol_er,tol_m", [
+    # reconstructed baselines: orderings must hold, values approximately
+    ("design12", 68.498, 0.596, 3.496, 3.0, 3.0),
+    ("design15", 65.425, 0.673, 3.531, 4.0, 2.0),
+    ("design16_d2", 86.326, 1.879, 9.551, 2.0, 2.0),
+    ("design13", 95.681, 1.565, 20.276, 3.0, 3.0),
+    ("design17_d2", 21.296, 0.162, 0.578, 2.5, 0.5),
+])
+def test_paper_table2_baselines(exact_table, comp, er, nmed, mred, tol_er,
+                                tol_m):
+    t = M.exhaustive_products(M.proposed_multiplier(comp))
+    m = metrics.evaluate(t, exact_table)
+    assert abs(m.er_pct - er) < tol_er
+    assert abs(m.mred_pct - mred) < mred * tol_m  # relative band
+
+
+def test_table2_accuracy_ordering(exact_table):
+    """Proposed must be the most accurate non-exact design (paper Table 2)."""
+    mred = {}
+    for comp in ["proposed", "design12", "design15", "design16_d2",
+                 "design13", "design17_d2"]:
+        t = M.exhaustive_products(M.proposed_multiplier(comp))
+        mred[comp] = metrics.evaluate(t, exact_table).mred_pct
+    assert mred["proposed"] == min(mred.values())
+
+
+def test_design1_structure_more_accurate(exact_table):
+    """Design-1 (exact MSB compressors) must beat the all-approx structure
+    on MRED (paper Table 4: 0.023 % vs 0.109 %)."""
+    d1 = metrics.evaluate(
+        M.exhaustive_products(M.design1_multiplier("proposed")), exact_table)
+    dp = metrics.evaluate(
+        M.exhaustive_products(M.proposed_multiplier("proposed")), exact_table)
+    assert d1.mred_pct < dp.mred_pct
+    assert abs(d1.mred_pct - 0.023) < 0.01
+
+
+def test_design2_truncation_band(exact_table):
+    d2 = metrics.evaluate(
+        M.exhaustive_products(M.design2_multiplier("proposed")), exact_table)
+    # paper Table 4: 0.715 % for single-error compressors in design-2
+    assert 0.3 < d2.mred_pct < 1.1
+
+
+def test_errors_always_nonpositive_for_proposed(exact_table):
+    """min(sum,3) compressors only lose value -> approx <= exact."""
+    t = M.exhaustive_products(M.proposed_multiplier("proposed"))
+    assert (t <= exact_table).all()
+    assert (t >= 0).all()
+
+
+def test_zero_operands_exact():
+    cfg = M.proposed_multiplier("proposed")
+    a = np.arange(256, dtype=np.int64)
+    z = np.zeros_like(a)
+    np.testing.assert_array_equal(M.multiply(a, z, cfg), 0)
+    np.testing.assert_array_equal(M.multiply(z, a, cfg), 0)
+
+
+def test_deficit_formulation_bit_exact(exact_table):
+    """deficit.approx_product == gate-level tree over the full input space,
+    for every registered compressor design."""
+    a = np.arange(256, dtype=np.int64)[:, None] + np.zeros((1, 256), np.int64)
+    b = np.arange(256, dtype=np.int64)[None, :] + np.zeros((256, 1), np.int64)
+    for comp in C.DESIGNS:
+        cfg = M.proposed_multiplier(comp)
+        t_tree = M.exhaustive_products(cfg)
+        t_def = deficit.approx_product(a, b, cfg)
+        np.testing.assert_array_equal(t_tree, t_def, err_msg=comp)
+
+
+def test_signed_lut_symmetry():
+    cfg = M.proposed_multiplier("proposed")
+    t = luts.signed_product_lut(cfg)
+    # sign-magnitude: p(-a, b) == -p(a, b)
+    for a, b in [(3, 5), (100, 100), (127, 127), (1, 127)]:
+        assert t[(-a) & 0xFF, b] == -t[a, b]
+        assert t[a, (-b) & 0xFF] == -t[a, b]
+        assert t[(-a) & 0xFF, (-b) & 0xFF] == t[a, b]
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(0, 255), st.integers(0, 255))
+def test_property_error_bound(a, b):
+    """|approx - exact| is bounded by the max error table entry and approx
+    is within [0, 65025]."""
+    lut = luts.product_lut(M.proposed_multiplier("proposed"))
+    p = int(lut[a, b])
+    assert 0 <= p <= 65025
+    assert abs(p - a * b) <= 3592
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(0, 255))
+def test_property_mult_by_one_and_zero(a):
+    lut = luts.product_lut(M.proposed_multiplier("proposed"))
+    assert lut[a, 0] == 0 and lut[0, a] == 0
+    assert lut[a, 1] == a and lut[1, a] == a  # single pp bit, no compression

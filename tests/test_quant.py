@@ -1,0 +1,63 @@
+"""Quantization-layer property tests (hypothesis) + backend consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.quant.quantize import (QuantConfig, fake_quant, quantize_dynamic,
+                                  abs_max_scale, QMAX)
+from repro.quant.matmul import quantized_matmul, integer_matmul
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=4,
+                max_size=64))
+def test_quantize_roundtrip_error_bound(vals):
+    x = jnp.asarray(np.array(vals, np.float32))
+    q, scale = quantize_dynamic(x)
+    err = np.abs(np.asarray(q, np.float32) * np.asarray(scale) -
+                 np.asarray(x))
+    assert err.max() <= float(np.asarray(scale).ravel()[0]) * 0.5 + 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_fake_quant_idempotent(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(8, 8)).astype(np.float32))
+    s = abs_max_scale(x)
+    y = fake_quant(x, s)
+    z = fake_quant(y, s)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(z), atol=1e-6)
+
+
+def test_backends_agree_in_expectation():
+    """approx backends = exact + bounded relative deviation on real-ish
+    activations/weights."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(32, 128)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(128, 16)).astype(np.float32) * 0.1)
+    y = {b: np.asarray(quantized_matmul(x, w, QuantConfig(backend=b)))
+         for b in ("int8_exact", "approx_lut", "approx_deficit",
+                   "approx_stage1", "approx_stage1_fused")}
+    np.testing.assert_array_equal(y["approx_lut"], y["approx_deficit"])
+    np.testing.assert_array_equal(y["approx_stage1"],
+                                  y["approx_stage1_fused"])
+    ref = np.asarray(x @ w)
+
+    def rel(a):
+        return np.linalg.norm(a - ref) / np.linalg.norm(ref)
+    # error ordering: exact-int8 < stage1 < full approx, all bounded
+    assert rel(y["int8_exact"]) < 0.05
+    assert rel(y["int8_exact"]) <= rel(y["approx_stage1"]) + 1e-6
+    assert rel(y["approx_stage1"]) <= rel(y["approx_lut"]) + 1e-6
+    assert rel(y["approx_lut"]) < 0.1
+
+
+def test_grad_flow_through_all_backends():
+    for b in ("int8_exact", "approx_lut", "approx_stage1_fused"):
+        g = jax.grad(lambda x: quantized_matmul(
+            x, jnp.ones((16, 4)) * 0.05, QuantConfig(backend=b)).sum())(
+            jnp.ones((2, 16)))
+        assert np.all(np.isfinite(np.asarray(g)))
+        assert float(np.abs(np.asarray(g)).sum()) > 0

@@ -1,0 +1,62 @@
+"""Sharding-rule unit/property tests."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as PS
+
+from repro.parallel.sharding import (DEFAULT_RULES, ShardingRules,
+                                     prune_spec)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_spec_basic(mesh):
+    sp = DEFAULT_RULES.spec(("batch", None, "heads"), mesh)
+    assert sp == PS("data", None, "model")
+
+
+def test_spec_drops_reused_axes(mesh):
+    # experts takes 'model'; mlp then cannot reuse it
+    sp = DEFAULT_RULES.spec(("experts", "fsdp", "mlp"), mesh)
+    assert sp == PS("model", "data")
+
+
+def test_spec_missing_mesh_axes():
+    m1 = jax.make_mesh((1,), ("data",))
+    sp = DEFAULT_RULES.spec(("batch", "heads"), m1)
+    assert sp == PS("data")  # 'model'/'pod' absent -> dropped
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(1, 64), min_size=1, max_size=4))
+def test_prune_spec_always_divides(dims):
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    sizes = {"data": 1, "model": 1}
+    spec = PS(*( ["data", "model", None, ("data", "model")][:len(dims)]))
+    pruned = prune_spec(tuple(dims), spec, mesh)
+    # every kept axis must divide its dim
+    for i, entry in enumerate(pruned):
+        if entry is None:
+            continue
+        axes = (entry,) if isinstance(entry, str) else entry
+        total = 1
+        for a in axes:
+            total *= sizes[a]
+        assert dims[i] % total == 0
+
+
+def test_prune_spec_examples():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # divisible dims keep their axes (sizes are 1 here so always divide)
+    assert prune_spec((16, 16), PS("data", "model"), mesh) == \
+        PS("data", "model")
+
+
+def test_seq_parallel_variant(mesh):
+    from repro.parallel.sharding import SEQ_PARALLEL_RULES
+    sp = SEQ_PARALLEL_RULES.spec(("batch", "seq"), mesh)
+    assert sp == PS("data", "model")
