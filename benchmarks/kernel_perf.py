@@ -1,7 +1,12 @@
-"""Kernel/backend micro-benchmarks: us_per_call for each integer-matmul
-backend on CPU, plus structural cost (vector-op counts) for the TPU model.
-Wall-times here are CPU reference numbers; the TPU roofline for the kernels
-is derived in benchmarks/roofline.py from the dry-run artifacts."""
+"""Kernel/backend micro-benchmarks: us_per_call for every registered
+integer-matmul backend on CPU, plus the fused-epilogue comparison (Pallas
+dequant+bias+ReLU in-kernel vs the unfused jnp composition) and structural
+cost (vector-op counts) for the TPU model. Wall-times here are CPU reference
+numbers; the TPU roofline for the kernels is derived in
+benchmarks/roofline.py from the dry-run artifacts.
+
+Backends are enumerated from the registry (repro.quant.matmul) — a newly
+registered backend shows up here with no edits."""
 from __future__ import annotations
 
 import time
@@ -15,12 +20,11 @@ from repro.quant.quantize import QuantConfig
 from repro.quant import matmul as QM
 
 
-def _time(fn, *args, reps=5) -> float:
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+def _time(fn, reps=5) -> float:
+    jax.block_until_ready(fn())
     t0 = time.time()
     for _ in range(reps):
-        jax.block_until_ready(fn(*args))
+        jax.block_until_ready(fn())
     return (time.time() - t0) / reps * 1e6
 
 
@@ -30,25 +34,41 @@ def run(quick: bool = True) -> List[Dict]:
     x = jnp.asarray(rng.integers(-127, 128, (m, k)).astype(np.int8))
     w = jnp.asarray(rng.integers(-127, 128, (k, n)).astype(np.int8))
     rows = []
-    backends = {
-        "int8_exact": lambda: QM.int8_matmul(x, w),
-        "approx_lut": lambda: QM.approx_matmul_lut(
-            x, w, QuantConfig(backend="approx_lut")),
-        "approx_deficit": lambda: QM.approx_matmul_deficit(
-            x, w, QuantConfig(backend="approx_deficit")),
-        "approx_stage1": lambda: QM.approx_matmul_stage1(
-            x, w, QuantConfig(backend="approx_stage1")),
-    }
     base = None
-    for name, fn in backends.items():
-        jfn = jax.jit(fn)
-        us = _time(lambda: jfn())
+    for name in QM.list_backends():
+        be = QM.get_backend(name)
+        cfg = QuantConfig(backend=name)
+        jfn = jax.jit(lambda f=be.fn, c=cfg: f(x, w, c))
+        us = _time(jfn)
         if base is None:
             base = us
         rows.append({"backend": name, "m": m, "k": k, "n": n,
                      "us_per_call": us, "slowdown_vs_exact": us / base})
-        print(f"kernel_perf: {name:16s} {us:10.1f} us  "
+        print(f"kernel_perf: {name:22s} {us:10.1f} us  "
               f"({us / base:6.1f}x exact)  [{m}x{k}x{n} int8]")
+
+    # fused epilogue: Pallas (dequant+bias+ReLU on the final k-step) vs the
+    # unfused jnp approx_deficit reference followed by the same epilogue
+    scale = jnp.full((1, n), 0.01, jnp.float32)
+    bias = jnp.asarray(rng.normal(size=(1, n)).astype(np.float32))
+    fused_be = QM.get_backend("approx_deficit_pallas")
+    cfg_p = QuantConfig(backend="approx_deficit_pallas")
+    cfg_r = QuantConfig(backend="approx_deficit")
+    fused = jax.jit(lambda: fused_be.fused(x, w, cfg_p, scale, bias, True))
+    unfused = jax.jit(lambda: jnp.maximum(
+        QM.approx_matmul_deficit(x, w, cfg_r).astype(jnp.float32) * scale
+        + bias, 0.0))
+    us_f = _time(fused)
+    us_u = _time(unfused)
+    for tag, us in (("fused_epilogue_pallas", us_f),
+                    ("unfused_jnp_deficit", us_u)):
+        rows.append({"backend": tag, "m": m, "k": k, "n": n,
+                     "us_per_call": us, "slowdown_vs_exact": us / base})
+        print(f"kernel_perf: {tag:22s} {us:10.1f} us  "
+              f"({us / base:6.1f}x exact)  [{m}x{k}x{n} int8+epilogue]")
+    print(f"kernel_perf: fused/unfused epilogue ratio = {us_f / us_u:.2f} "
+          "(<= 1.0 means the in-kernel epilogue wins)")
+
     # structural cost of the deficit kernel (ops per element, TPU model)
     rows.append({"backend": "deficit_ops_per_elem", "m": 0, "k": 0, "n": 0,
                  "us_per_call": 0.0, "slowdown_vs_exact": 0.0,

@@ -52,8 +52,18 @@ def _comp_outputs(design: str, bits):
     if isinstance(idx, np.ndarray):
         v = table[idx]
     else:
-        import jax.numpy as jnp
-        v = jnp.asarray(table)[idx]
+        # jax path: evaluate the 16-entry truth table as a minterm sum of
+        # baked-in Python ints — gather-free and free of captured-constant
+        # arrays, so it is legal inside Pallas kernel bodies.
+        v = None
+        for i in range(16):
+            ti = int(table[i])
+            if ti == 0:
+                continue
+            term = (idx == i).astype(idx.dtype) * ti
+            v = term if v is None else v + term
+        if v is None:
+            v = idx * 0
     return v & 1, (v >> 1) & 1, t - v
 
 

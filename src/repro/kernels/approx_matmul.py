@@ -1,22 +1,37 @@
 """Pallas TPU kernels for approximate-multiplier matmuls.
 
-Two kernels, two roles:
+Two tile bodies, shared by the int32 (pre-dequant) and fused-epilogue
+kernels:
 
-1. ``approx_matmul_kernel`` — bit-exact emulation of the paper's multiplier.
-   Per (bm, bn, bk) tile: the exact int8 dot runs on the MXU; the error term
-   is accumulated by a fori_loop over the k dimension evaluating the
-   *deficit planes* (core/deficit.py) on (bm, bn) broadcasts — pure VPU
-   bit-ops, no gathers, no 64K LUT in VMEM. This is the TPU-native port of
-   the circuit: the same boolean sites, evaluated as vector ops.
+1. deficit — bit-exact emulation of the paper's multiplier. Per (bm, bn, bk)
+   tile: the exact int8 dot runs on the MXU; the error term is accumulated
+   by a fori_loop over k-chunks of width ``kv`` evaluating the *deficit
+   planes* (core/deficit.py) on (bm, kv, bn) broadcasts — pure VPU bit-ops,
+   no gathers, no 64K LUT in VMEM. This is the TPU-native port of the
+   circuit: the same boolean sites, evaluated as vector ops. ``kv`` trades
+   loop trips for intermediate size (bm * kv * bn i32 planes); kv=1
+   reproduces the original one-column-at-a-time loop.
 
-2. ``stage1_matmul_kernel`` — the beyond-paper re-approximation: exact tile
-   dot minus the 7 rank-1 stage-1 site corrections, each itself a tile dot
-   (all MXU work, ~8x an exact matmul, ~40x cheaper than full emulation and
-   3.5x more accurate than the paper's multiplier — see EXPERIMENTS.md).
+2. stage1 — the beyond-paper re-approximation: exact tile dot minus the 7
+   rank-1 stage-1 site corrections, each itself a tile dot (all MXU work,
+   ~8x an exact matmul, ~40x cheaper than full emulation and 3.5x more
+   accurate than the paper's multiplier — see EXPERIMENTS.md).
+
+Entry points:
+
+``approx_matmul_pallas``   (M, K) x (K, N) -> int32 (M, N); the raw
+                           integer contract shared with the jnp backends.
+``fused_matmul_pallas``    (B, M, K) or (M, K) int8 -> float32; the int32
+                           accumulator lives in VMEM scratch and the
+                           epilogue (dequant scale — per-tensor or
+                           per-channel — optional bias, optional ReLU) runs
+                           in-kernel on the final k-step. Leading batch dim
+                           is a grid axis: (B, T, K) activations hit the
+                           kernel without host-side reshape/copy.
 
 Block sizes default to MXU-aligned (128, 128, 128); VMEM budget per tile:
-x (bm,bk) + w (bk,bn) int8 + out (bm,bn) i32 + ~4 (bm,bn) i32 scratch planes
-= 16K + 16K + 64K + 256K ≈ 0.35 MB — comfortably within the ~16 MB/core.
+x (bm,bk) + w (bk,bn) int8 + out (bm,bn) i32/f32 + acc scratch + kv deficit
+planes (bm,kv,bn) i32 ≈ 0.1 MB + kv * 64K — within ~16 MB/core for kv<=32.
 """
 from __future__ import annotations
 
@@ -37,10 +52,62 @@ def _exact_dot(x, w):
 
 
 # ---------------------------------------------------------------------------
-# Kernel 1: bit-exact deficit emulation
+# Shared tile bodies
 # ---------------------------------------------------------------------------
 
-def _approx_kernel(x_ref, w_ref, o_ref, *, bk: int, design: str):
+def _deficit_tile_err(x, w, design: str, kv: int):
+    """sum_k deficit(|x[m,k]|, |w[k,n]|) * sign for one (bm, bk, bn) tile.
+
+    Evaluates the deficit planes on (bm, kv, bn) broadcasts, kv k-columns
+    per loop trip. Integer-exact for any kv; padded k-columns contribute
+    zero because their sign product is zero.
+    """
+    bm, bk = x.shape
+    bn = w.shape[1]
+    while bk % kv:          # largest divisor of bk not above the requested kv
+        kv -= 1
+    xmag, wmag = jnp.abs(x), jnp.abs(w)
+    xsgn, wsgn = jnp.sign(x), jnp.sign(w)
+
+    def body(c, err):
+        a = jax.lax.dynamic_slice_in_dim(xmag, c * kv, kv, axis=1)   # (bm,kv)
+        sa = jax.lax.dynamic_slice_in_dim(xsgn, c * kv, kv, axis=1)
+        b = jax.lax.dynamic_slice_in_dim(wmag, c * kv, kv, axis=0)   # (kv,bn)
+        sb = jax.lax.dynamic_slice_in_dim(wsgn, c * kv, kv, axis=0)
+        df = D.deficit_sum(a[:, :, None], b[None, :, :], design)
+        return err + (df * (sa[:, :, None] * sb[None, :, :])).sum(axis=1)
+
+    return jax.lax.fori_loop(0, bk // kv, body,
+                             jnp.zeros((bm, bn), jnp.int32))
+
+
+def _stage1_tile_corr(x, w):
+    """sum of the 7 rank-1 stage-1 site corrections for one tile (each an
+    MXU dot over {-1,0,1} window features)."""
+
+    xmag, wmag = jnp.abs(x), jnp.abs(w)
+    xsgn, wsgn = jnp.sign(x), jnp.sign(w)
+
+    def window(v, s):
+        out = (v >> s) & 1
+        for i in range(s + 1, s + 4):
+            out = out & ((v >> i) & 1)
+        return out
+
+    corr = None
+    for col, ra, rb in STAGE1_SITES:
+        u = window(xmag, ra) * xsgn            # (bm, bk) in {-1,0,1}
+        v = window(wmag, rb) * wsgn
+        term = _exact_dot(u, v) << col
+        corr = term if corr is None else corr + term
+    return corr
+
+
+# ---------------------------------------------------------------------------
+# int32 kernels (pre-dequant contract, 2D)
+# ---------------------------------------------------------------------------
+
+def _approx_kernel(x_ref, w_ref, o_ref, *, design: str, kv: int):
     k_idx = pl.program_id(2)
 
     @pl.when(k_idx == 0)
@@ -49,28 +116,8 @@ def _approx_kernel(x_ref, w_ref, o_ref, *, bk: int, design: str):
 
     x = x_ref[...].astype(jnp.int32)           # (bm, bk)
     w = w_ref[...].astype(jnp.int32)           # (bk, bn)
-    acc = _exact_dot(x, w)
+    o_ref[...] += _exact_dot(x, w) - _deficit_tile_err(x, w, design, kv)
 
-    xmag = jnp.abs(x)
-    wmag = jnp.abs(w)
-    xsgn = jnp.sign(x)
-    wsgn = jnp.sign(w)
-
-    def body(k, err):
-        a = jax.lax.dynamic_slice_in_dim(xmag, k, 1, axis=1)       # (bm,1)
-        sa = jax.lax.dynamic_slice_in_dim(xsgn, k, 1, axis=1)
-        b = jax.lax.dynamic_slice_in_dim(wmag, k, 1, axis=0)       # (1,bn)
-        sb = jax.lax.dynamic_slice_in_dim(wsgn, k, 1, axis=0)
-        df = D.deficit_sum(a, b, design)                           # (bm,bn)
-        return err + df * (sa * sb)
-
-    err = jax.lax.fori_loop(0, bk, body, jnp.zeros_like(acc))
-    o_ref[...] += acc - err
-
-
-# ---------------------------------------------------------------------------
-# Kernel 2: stage-1 corrected (MXU-only)
-# ---------------------------------------------------------------------------
 
 def _stage1_kernel(x_ref, w_ref, o_ref):
     k_idx = pl.program_id(2)
@@ -81,23 +128,37 @@ def _stage1_kernel(x_ref, w_ref, o_ref):
 
     x = x_ref[...].astype(jnp.int32)
     w = w_ref[...].astype(jnp.int32)
+    o_ref[...] += _exact_dot(x, w) - _stage1_tile_corr(x, w)
+
+
+# ---------------------------------------------------------------------------
+# fused-epilogue kernel (batched, float32 out)
+# ---------------------------------------------------------------------------
+
+def _fused_kernel(x_ref, w_ref, s_ref, b_ref, o_ref, acc_ref, *,
+                  nk: int, design: str, variant: str, relu: bool, kv: int):
+    k_idx = pl.program_id(3)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0].astype(jnp.int32)             # (bm, bk)
+    w = w_ref[...].astype(jnp.int32)           # (bk, bn)
     acc = _exact_dot(x, w)
-    xmag = jnp.abs(x)
-    wmag = jnp.abs(w)
-    xsgn = jnp.sign(x)
-    wsgn = jnp.sign(w)
+    if variant == "deficit":
+        acc = acc - _deficit_tile_err(x, w, design, kv)
+    elif variant == "stage1":
+        acc = acc - _stage1_tile_corr(x, w)
+    # variant == "exact": plain int8 dot
+    acc_ref[...] += acc
 
-    def window(v, s):
-        out = (v >> s) & 1
-        for i in range(s + 1, s + 4):
-            out = out & ((v >> i) & 1)
-        return out
-
-    for col, ra, rb in STAGE1_SITES:
-        u = window(xmag, ra) * xsgn            # (bm, bk) in {-1,0,1}
-        v = window(wmag, rb) * wsgn
-        acc = acc - (_exact_dot(u, v) << col)
-    o_ref[...] += acc
+    @pl.when(k_idx == nk - 1)
+    def _epilogue():
+        out = acc_ref[...].astype(jnp.float32) * s_ref[...] + b_ref[...]
+        if relu:
+            out = jnp.maximum(out, 0.0)
+        o_ref[0] = out
 
 
 # ---------------------------------------------------------------------------
@@ -111,13 +172,22 @@ def _pad_to(x, m, axes):
     return jnp.pad(x, pads) if any(p != (0, 0) for p in pads) else x
 
 
+def _compiler_params(interpret: bool, n_parallel: int):
+    if interpret:  # interpreter ignores/rejects TPU compiler params
+        return {}
+    from jax.experimental.pallas import tpu as pltpu
+    return {"compiler_params": pltpu.CompilerParams(
+        dimension_semantics=("parallel",) * n_parallel + ("arbitrary",))}
+
+
 @functools.partial(jax.jit, static_argnames=("block", "design", "interpret",
-                                             "kernel"))
+                                             "kernel", "kv"))
 def approx_matmul_pallas(x_q: jax.Array, w_q: jax.Array,
                          block: Tuple[int, int, int] = (128, 128, 128),
                          design: str = "proposed",
                          kernel: str = "deficit",
-                         interpret: bool = True) -> jax.Array:
+                         interpret: bool = True,
+                         kv: int = 32) -> jax.Array:
     """x_q (M,K) int8, w_q (K,N) int8 -> (M,N) int32 approximate matmul."""
     m, k = x_q.shape
     _, n = w_q.shape
@@ -129,13 +199,8 @@ def approx_matmul_pallas(x_q: jax.Array, w_q: jax.Array,
     np_ = wp.shape[1]
     grid = (mp // bm, np_ // bn, kp // bk)
 
-    body = (functools.partial(_approx_kernel, bk=bk, design=design)
+    body = (functools.partial(_approx_kernel, design=design, kv=kv)
             if kernel == "deficit" else _stage1_kernel)
-    extra = {}
-    if not interpret:  # TPU compile path: declare k as the reduction dim
-        from jax.experimental.pallas import tpu as pltpu
-        extra["compiler_params"] = pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"))
     out = pl.pallas_call(
         body,
         grid=grid,
@@ -144,6 +209,63 @@ def approx_matmul_pallas(x_q: jax.Array, w_q: jax.Array,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
         interpret=interpret,
-        **extra,
+        **_compiler_params(interpret, 2),
     )(xp, wp)
     return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "design", "variant",
+                                             "relu", "interpret", "kv"))
+def fused_matmul_pallas(x_q: jax.Array, w_q: jax.Array,
+                        scale: jax.Array, bias: jax.Array,
+                        block: Tuple[int, int, int] = (128, 128, 128),
+                        design: str = "proposed",
+                        variant: str = "deficit",
+                        relu: bool = False,
+                        interpret: bool = True,
+                        kv: int = 32) -> jax.Array:
+    """Integer matmul with the dequant epilogue fused in-kernel.
+
+    x_q:   (B, M, K) or (M, K) int8 — leading batch dim is a grid axis.
+    w_q:   (K, N) int8.
+    scale: (1, N) float32 combined dequant scale (sx * sw); per-tensor
+           callers broadcast their scalar to (1, N).
+    bias:  (1, N) float32 (pass zeros when absent).
+
+    Returns float32 (B, M, N) / (M, N):
+        out = relu?(acc_int32 * scale + bias)
+    computed on the final k-step from the VMEM int32 accumulator — no
+    separate dequant/bias/activation passes over HBM.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+    squeeze = x_q.ndim == 2
+    if squeeze:
+        x_q = x_q[None]
+    batch, m, k = x_q.shape
+    n = w_q.shape[1]
+    bm, bn, bk = block
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    xp = _pad_to(x_q, (bm, bk), (1, 2))
+    wp = _pad_to(w_q, (bk, bn), (0, 1))
+    _, mp, kp = xp.shape
+    np_ = wp.shape[1]
+    sp = _pad_to(scale.astype(jnp.float32), (bn,), (1,))
+    bp = _pad_to(bias.astype(jnp.float32), (bn,), (1,))
+    grid = (batch, mp // bm, np_ // bn, kp // bk)
+
+    out = pl.pallas_call(
+        functools.partial(_fused_kernel, nk=kp // bk, design=design,
+                          variant=variant, relu=relu, kv=kv),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, bm, bk), lambda b, i, j, kk: (b, i, kk)),
+                  pl.BlockSpec((bk, bn), lambda b, i, j, kk: (kk, j)),
+                  pl.BlockSpec((1, bn), lambda b, i, j, kk: (0, j)),
+                  pl.BlockSpec((1, bn), lambda b, i, j, kk: (0, j))],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda b, i, j, kk: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((batch, mp, np_), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+        **_compiler_params(interpret, 3),
+    )(xp, wp, sp, bp)
+    out = out[:, :m, :n]
+    return out[0] if squeeze else out

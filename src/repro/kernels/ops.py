@@ -1,8 +1,10 @@
 """Jit'd public wrappers for the Pallas kernels.
 
-`approx_matmul` is what quant.matmul routes through when
-`enable_pallas(True)` — same contract as the jnp reference backends.
-On CPU the kernels run in interpret mode (bit-exact, slow); on TPU set
+These are the functions the backend registry in `repro.quant.matmul` binds
+for the `*_pallas` entries — same contract as the jnp reference backends
+(int8 in, int32 out), plus `*_fused` variants that run the dequant / bias /
+ReLU epilogue in-kernel and accept a leading batch dim.
+On CPU the kernels run in interpret mode (bit-exact, slow); on TPU
 interpret=False (the default flips on TPU backends).
 """
 from __future__ import annotations
@@ -10,7 +12,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.approx_matmul import approx_matmul_pallas
+from repro.kernels.approx_matmul import (approx_matmul_pallas,
+                                         fused_matmul_pallas)
 from repro.quant.quantize import QuantConfig
 
 
@@ -30,3 +33,23 @@ def stage1_matmul(x_q: jax.Array, w_q: jax.Array) -> jax.Array:
     """Beyond-paper MXU-friendly re-approximation (stage-1 errors only)."""
     return approx_matmul_pallas(
         x_q, w_q, kernel="stage1", interpret=_interpret_default())
+
+
+def approx_matmul_fused(x_q: jax.Array, w_q: jax.Array, cfg: QuantConfig,
+                        scale: jax.Array, bias: jax.Array,
+                        relu: bool = False) -> jax.Array:
+    """Deficit kernel with fused dequant(+bias)(+ReLU) epilogue.
+
+    x_q may carry a leading batch dim: (B, M, K) or (M, K)."""
+    return fused_matmul_pallas(
+        x_q, w_q, scale, bias, design=cfg.multiplier, variant="deficit",
+        relu=relu, interpret=_interpret_default())
+
+
+def stage1_matmul_fused(x_q: jax.Array, w_q: jax.Array, cfg: QuantConfig,
+                        scale: jax.Array, bias: jax.Array,
+                        relu: bool = False) -> jax.Array:
+    """Stage-1 kernel with fused dequant(+bias)(+ReLU) epilogue."""
+    return fused_matmul_pallas(
+        x_q, w_q, scale, bias, variant="stage1",
+        relu=relu, interpret=_interpret_default())

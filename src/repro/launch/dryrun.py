@@ -33,7 +33,7 @@ from repro.launch.mesh import make_production_mesh
 from repro.launch import specs as SP
 from repro.models import transformer_lm as TLM
 from repro.optim import adamw
-from repro.parallel.sharding import DEFAULT_RULES
+from repro.parallel.sharding import DEFAULT_RULES, use_mesh
 from repro.train import steps as ST
 
 OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
@@ -58,7 +58,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool, quant: str = "bf16",
         # big-model default: bound remat-residual memory (DESIGN.md §5)
         microbatches = 8
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         inputs = SP.input_specs(cfg, shape, mesh, rules)
         if kind == "train":
             opt_cfg = adamw.AdamWConfig(quantized_state=True)
@@ -98,8 +98,8 @@ def run_cell(arch: str, shape: str, multi_pod: bool, quant: str = "bf16",
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
-    from repro.launch.hlo_costs import HloCost
+    from repro.launch.hlo_costs import HloCost, builtin_cost_analysis
+    cost = builtin_cost_analysis(compiled)
     hc = HloCost(compiled.as_text())
     rec = {
         "arch": arch, "shape": shape,

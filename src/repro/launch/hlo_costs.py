@@ -246,3 +246,15 @@ class HloCost:
         return {"flops": self.flops, "flops_int8": self.flops_int8,
                 "hbm_bytes": self.hbm_bytes,
                 "collective_bytes": dict(self.collectives)}
+
+
+def builtin_cost_analysis(compiled) -> Dict:
+    """XLA's own cost analysis as a flat dict, across jax versions.
+
+    jax <= 0.4.x returns a one-element list of per-module dicts from
+    `compiled.cost_analysis()`; newer versions return the dict directly.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)

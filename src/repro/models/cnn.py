@@ -36,12 +36,12 @@ def keras_cnn_descs(n_classes: int = 10):
 
 
 def keras_cnn_apply(params, x, quant: QuantConfig = BF16, qat=False):
-    x = jax.nn.relu(CV.conv2d(params["c1"], x, quant, qat=qat))
+    x = CV.conv2d(params["c1"], x, quant, qat=qat, activation="relu")
     x = CV.maxpool2(x)
-    x = jax.nn.relu(CV.conv2d(params["c2"], x, quant, qat=qat))
+    x = CV.conv2d(params["c2"], x, quant, qat=qat, activation="relu")
     x = CV.maxpool2(x)
     x = x.reshape(x.shape[0], -1)
-    x = jax.nn.relu(L.dense(params["fc1"], x, quant, qat=qat))
+    x = L.dense(params["fc1"], x, quant, qat=qat, activation="relu")
     return L.dense(params["fc2"], x, quant, qat=qat)
 
 
@@ -63,13 +63,13 @@ def lenet5_descs(n_classes: int = 10):
 
 
 def lenet5_apply(params, x, quant: QuantConfig = BF16, qat=False):
-    x = jax.nn.relu(CV.conv2d(params["c1"], x, quant, qat=qat))
+    x = CV.conv2d(params["c1"], x, quant, qat=qat, activation="relu")
     x = CV.avgpool2(x)
-    x = jax.nn.relu(CV.conv2d(params["c2"], x, quant, qat=qat))
+    x = CV.conv2d(params["c2"], x, quant, qat=qat, activation="relu")
     x = CV.avgpool2(x)
     x = x.reshape(x.shape[0], -1)
-    x = jax.nn.relu(L.dense(params["fc1"], x, quant, qat=qat))
-    x = jax.nn.relu(L.dense(params["fc2"], x, quant, qat=qat))
+    x = L.dense(params["fc1"], x, quant, qat=qat, activation="relu")
+    x = L.dense(params["fc2"], x, quant, qat=qat, activation="relu")
     return L.dense(params["fc3"], x, quant, qat=qat)
 
 
@@ -112,10 +112,11 @@ def ffdnet_apply(params, noisy, sigma, cfg: FFDNetConfig = FFDNetConfig(),
     smap = jnp.broadcast_to(jnp.reshape(sigma, (-1, 1, 1, 1)),
                             (x.shape[0], x.shape[1], x.shape[2], 1))
     x = jnp.concatenate([x, smap.astype(x.dtype)], axis=-1)
-    x = jax.nn.relu(CV.conv2d(params["in"], x, quant, qat=qat))
+    x = CV.conv2d(params["in"], x, quant, qat=qat, activation="relu")
     i = 0
     while f"mid{i}" in params:
-        x = jax.nn.relu(CV.conv2d(params[f"mid{i}"], x, quant, qat=qat))
+        x = CV.conv2d(params[f"mid{i}"], x, quant, qat=qat,
+                      activation="relu")
         i += 1
     x = CV.conv2d(params["out"], x, quant, qat=qat)
     return noisy - pixel_shuffle(x)                # residual: predict noise

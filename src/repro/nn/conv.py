@@ -45,22 +45,30 @@ def im2col(x: jax.Array, k: int, stride: int = 1,
 
 
 def conv2d(params, x, quant: QuantConfig, stride: int = 1,
-           padding: str = "SAME", qat: bool = False):
-    """x: (B,H,W,Cin) -> (B,Ho,Wo,Cout) via the selected backend."""
+           padding: str = "SAME", qat: bool = False,
+           activation: str = None):
+    """x: (B,H,W,Cin) -> (B,Ho,Wo,Cout) via the selected backend.
+
+    activation (None | 'relu') rides the quantized_matmul epilogue: for
+    fused backends the dequant + bias + ReLU run inside the Pallas kernel
+    on the im2col patches (batched over B*Ho*Wo rows without a copy)."""
     w = params["w"]
     k, _, c_in, c_out = w.shape
     b = x.shape[0]
     if quant.is_quantized and not qat:
         cols, (ho, wo) = im2col(x, k, stride, padding)
-        y = quantized_matmul(cols, w.reshape(k * k * c_in, c_out), quant)
-        y = y.reshape(b, ho, wo, c_out)
-    else:
-        wq = fake_quant_per_channel(w, axis=-1) if qat else w
-        y = jax.lax.conv_general_dilated(
-            x, wq, (stride, stride), padding,
-            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        y = quantized_matmul(cols.reshape(b, ho * wo, k * k * c_in),
+                             w.reshape(k * k * c_in, c_out), quant,
+                             bias=params.get("b"), activation=activation)
+        return y.reshape(b, ho, wo, c_out)
+    wq = fake_quant_per_channel(w, axis=-1) if qat else w
+    y = jax.lax.conv_general_dilated(
+        x, wq, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
     if "b" in params:
         y = y + params["b"]
+    if activation == "relu":
+        y = jax.nn.relu(y)
     return y
 
 

@@ -23,22 +23,29 @@ def dense_desc(d_in: int, d_out: int, logical=( "embed", "mlp"),
     return d
 
 
-def dense(params, x, quant: QuantConfig, qat: bool = False):
-    """y = x @ w (+ b), executed per the quant backend.
+def dense(params, x, quant: QuantConfig, qat: bool = False,
+          activation: Optional[str] = None):
+    """y = act(x @ w (+ b)), executed per the quant backend.
 
     qat=True runs fake-quant (float ops, STE) — used when *training* a model
     that will deploy on the approximate multiplier.
+
+    activation (None | 'relu') is threaded into quantized_matmul so
+    backends with a fused epilogue run dequant + bias + activation
+    in-kernel; the float path applies it after the bias add.
     """
     w = params["w"]
     if quant.is_quantized and not qat:
-        y = quantized_matmul(x, w, quant)
-    else:
-        if qat:
-            w = fake_quant_per_channel(w, axis=-1)
-        y = jnp.einsum("...k,kn->...n", x, w,
-                       preferred_element_type=jnp.float32).astype(x.dtype)
+        return quantized_matmul(x, w, quant, bias=params.get("b"),
+                                activation=activation)
+    if qat:
+        w = fake_quant_per_channel(w, axis=-1)
+    y = jnp.einsum("...k,kn->...n", x, w,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
     if "b" in params:
         y = y + params["b"].astype(y.dtype)
+    if activation == "relu":
+        y = jax.nn.relu(y)
     return y
 
 

@@ -24,6 +24,17 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
 Axes = Union[None, str, Tuple[str, ...]]
 
 
+def use_mesh(mesh: Mesh):
+    """Version-portable `jax.set_mesh`: a context manager installing `mesh`
+    as the ambient mesh. jax >= 0.6 has jax.set_mesh; 0.5.x has
+    jax.sharding.use_mesh; on 0.4.x Mesh itself is the context manager."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return mesh
+
+
 @dataclasses.dataclass(frozen=True)
 class ShardingRules:
     batch: Axes = ("pod", "data")     # activation batch dim

@@ -1,25 +1,36 @@
-"""Quantized matmul execution backends.
+"""Quantized matmul execution backends — a pluggable registry.
 
 All integer backends share the contract:
     out_int32[m, n] = sum_k  P(x_q[m, k], w_q[k, n])
 where P is the (possibly approximate) signed product of two int8 values in
-[-127, 127]. Backends:
+[-127, 127]. Built-in entries (see `list_backends()`):
 
-  int8_exact      P = a * b                          (MXU-native)
-  approx_lut      P = sign * LUT_u8(|a|, |b|)        (paper-faithful, B1)
-  approx_deficit  P = a*b - sign * deficit(|a|,|b|)  (bit-identical to LUT;
-                                                      gather-free, B2 — the
-                                                      Pallas kernel's math)
-  approx_stage1   P = a*b - sign * stage1_err(|a|,|b|) (beyond-paper: keeps
-                  only the rank-1-factorizable stage-1 compressor errors ->
-                  evaluates as 1 + ~6 extra MXU matmuls, see DESIGN.md §3)
+  int8_exact            P = a * b                        (MXU-native)
+  approx_lut            P = sign * LUT_u8(|a|, |b|)      (paper-faithful, B1)
+  approx_deficit        P = a*b - sign * deficit(|a|,|b|) (bit-identical to
+                        LUT; gather-free, B2 — the Pallas kernel's math)
+  approx_stage1         P = a*b - sign * stage1_err(|a|,|b|) (beyond-paper:
+                        keeps only the rank-1-factorizable stage-1 compressor
+                        errors -> 1 + ~6 extra MXU matmuls, see DESIGN.md §3)
+  approx_stage1_fused   bit-identical to approx_stage1 in 4 matmuls
+  approx_deficit_pallas the Pallas kernel (bit-identical to approx_lut);
+                        supports the fused dequant/bias/ReLU epilogue and
+                        leading-dim batching
+  approx_stage1_pallas  Pallas stage-1 kernel (bit-identical to
+                        approx_stage1); fused epilogue likewise
+
+New backends are added with `register_backend(name, fn)` — per-layer
+selection then works everywhere `QuantConfig.backend` is consumed (dense,
+conv, benchmarks, parity tests) with no dispatch chains to edit.
 
 Backward is always the straight-through estimator (exact float grads), which
 is how the paper trains its Keras models (forward substitution only).
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import lru_cache, partial
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -61,8 +72,8 @@ def _mult_cfg(cfg: QuantConfig) -> MultiplierConfig:
 
 
 # ---------------------------------------------------------------------------
-# Integer matmul kernels (jnp reference implementations; the Pallas kernel
-# in repro.kernels overrides approx paths on TPU / in benchmarks)
+# Integer matmul kernels (jnp reference implementations; the Pallas kernels
+# in repro.kernels are registered as the *_pallas backends)
 # ---------------------------------------------------------------------------
 
 def int8_matmul(x_q: jax.Array, w_q: jax.Array) -> jax.Array:
@@ -110,7 +121,6 @@ def approx_matmul_deficit(x_q, w_q, cfg: QuantConfig) -> jax.Array:
     ws = w_q.astype(jnp.int32)
     xmag = jnp.abs(xs)
     wmag = jnp.abs(ws)
-    sgn = None  # applied per chunk
 
     chunk_m = max(1, min(m, (1 << 20) // max(1, k * n)))
     pad = (-m) % chunk_m
@@ -200,20 +210,122 @@ def approx_matmul_stage1_fused(x_q, w_q, cfg: QuantConfig) -> jax.Array:
     return out
 
 
-BACKENDS = {
-    "int8_exact": lambda x, w, cfg: int8_matmul(x, w),
-    "approx_lut": approx_matmul_lut,
-    "approx_deficit": approx_matmul_deficit,
-    "approx_stage1": approx_matmul_stage1,
-    "approx_stage1_fused": approx_matmul_stage1_fused,
-}
+# ---------------------------------------------------------------------------
+# Backend registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """One integer-matmul execution path.
+
+    fn:     (x_q (M,K) int8, w_q (K,N) int8, cfg) -> (M,N) int32 — the
+            pre-dequant contract shared by every backend.
+    grad:   backward rule; only 'ste' (straight-through, exact float grads)
+            is defined today.
+    fused:  optional (x_q (B,M,K)|(M,K), w_q, cfg, scale (1,N) f32,
+            bias (1,N) f32, relu: bool) -> f32 — integer matmul with the
+            dequant/bias/ReLU epilogue fused (Pallas entries). When set,
+            `quantized_matmul` routes through it and batched leading dims
+            hit the kernel directly.
+    oracle: name of the registered backend this entry must bit-match
+            pre-dequant (drives the parity suite in tests/test_backends.py).
+    note:   one-line description for benchmarks/docs.
+    """
+    name: str
+    fn: Callable[[jax.Array, jax.Array, QuantConfig], jax.Array]
+    grad: str = "ste"
+    fused: Optional[Callable] = None
+    oracle: Optional[str] = None
+    note: str = ""
+
+
+_REGISTRY: Dict[str, Backend] = {}
+
+
+def register_backend(name: str, fn: Callable, *, grad: str = "ste",
+                     fused: Optional[Callable] = None,
+                     oracle: Optional[str] = None, note: str = "",
+                     overwrite: bool = False) -> Backend:
+    """Register an integer-matmul backend under `name`.
+
+    The entry becomes selectable per layer via `QuantConfig(backend=name)`
+    and is enumerated by `list_backends()` (parity tests, benchmarks)."""
+    if grad != "ste":
+        raise ValueError(f"unknown grad rule {grad!r}; only 'ste' is defined")
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"backend {name!r} already registered "
+                         "(pass overwrite=True to replace)")
+    be = Backend(name=name, fn=fn, grad=grad, fused=fused, oracle=oracle,
+                 note=note)
+    _REGISTRY[name] = be
+    return be
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown quant backend {name!r}; registered: "
+                       f"{list_backends()}") from None
+
+
+def list_backends() -> Tuple[str, ...]:
+    """Registered backend names, in registration order."""
+    return tuple(_REGISTRY)
+
+
+def _deficit_pallas(x_q, w_q, cfg: QuantConfig) -> jax.Array:
+    from repro.kernels import ops as kops
+    return kops.approx_matmul(x_q, w_q, cfg)
+
+
+def _deficit_pallas_fused(x_q, w_q, cfg, scale, bias, relu):
+    from repro.kernels import ops as kops
+    return kops.approx_matmul_fused(x_q, w_q, cfg, scale, bias, relu)
+
+
+def _stage1_pallas(x_q, w_q, cfg: QuantConfig) -> jax.Array:
+    from repro.kernels import ops as kops
+    return kops.stage1_matmul(x_q, w_q)
+
+
+def _stage1_pallas_fused(x_q, w_q, cfg, scale, bias, relu):
+    from repro.kernels import ops as kops
+    return kops.stage1_matmul_fused(x_q, w_q, cfg, scale, bias, relu)
+
+
+register_backend("int8_exact", lambda x, w, cfg: int8_matmul(x, w),
+                 note="W8A8 exact integer products (MXU-native)")
+register_backend("approx_lut", approx_matmul_lut,
+                 note="paper-faithful signed-LUT emulation (gather-bound)")
+register_backend("approx_deficit", approx_matmul_deficit,
+                 oracle="approx_lut",
+                 note="deficit-plane emulation, gather-free jnp reference")
+register_backend("approx_stage1", approx_matmul_stage1,
+                 note="stage-1 rank-1 re-approximation (8 MXU matmuls)")
+register_backend("approx_stage1_fused", approx_matmul_stage1_fused,
+                 oracle="approx_stage1",
+                 note="stage-1 re-approximation in 4 matmuls")
+register_backend("approx_deficit_pallas", _deficit_pallas,
+                 fused=_deficit_pallas_fused, oracle="approx_lut",
+                 note="Pallas deficit kernel + fused dequant/bias/ReLU "
+                      "epilogue")
+register_backend("approx_stage1_pallas", _stage1_pallas,
+                 fused=_stage1_pallas_fused, oracle="approx_stage1",
+                 note="Pallas stage-1 kernel + fused epilogue")
+
+
+def _resolve_backend(cfg: QuantConfig) -> Backend:
+    """Registry lookup honoring the legacy enable_pallas() global remap."""
+    name = cfg.backend
+    if _use_pallas() and name in ("approx_lut", "approx_deficit"):
+        name = "approx_deficit_pallas"
+    return get_backend(name)
 
 
 def integer_matmul(x_q, w_q, cfg: QuantConfig) -> jax.Array:
-    if cfg.backend in ("approx_lut", "approx_deficit") and _use_pallas():
-        from repro.kernels import ops as kops
-        return kops.approx_matmul(x_q, w_q, cfg)
-    return BACKENDS[cfg.backend](x_q, w_q, cfg)
+    """Pre-dequant int32 matmul via the backend selected by cfg.backend."""
+    return _resolve_backend(cfg).fn(x_q, w_q, cfg)
 
 
 _PALLAS = {"enabled": False}
@@ -224,9 +336,9 @@ def _use_pallas() -> bool:
 
 
 def enable_pallas(flag: bool = True):
-    """Route approx backends through the Pallas kernel (interpret=True on
-    CPU). Off by default: the jnp reference path is faster in interpret
-    mode; benchmarks and kernel tests enable it explicitly."""
+    """Legacy switch: route approx_lut/approx_deficit through the Pallas
+    kernel. Prefer selecting backend='approx_deficit_pallas' per layer; this
+    global remains for benchmarks/scripts that toggle the whole model."""
     _PALLAS["enabled"] = flag
 
 
@@ -234,36 +346,102 @@ def enable_pallas(flag: bool = True):
 # Float-in/float-out quantized matmul with STE backward
 # ---------------------------------------------------------------------------
 
-@partial(jax.custom_vjp, nondiff_argnums=(2,))
-def quantized_matmul(x: jax.Array, w: jax.Array, cfg: QuantConfig):
-    """y = dequant(integer_matmul(q(x), q(w))). x: (..., k), w: (k, n)."""
-    return _qmm_fwd(x, w, cfg)[0]
+def quantized_matmul(x: jax.Array, w: jax.Array, cfg: QuantConfig,
+                     bias: Optional[jax.Array] = None,
+                     activation: Optional[str] = None) -> jax.Array:
+    """y = act(dequant(integer_matmul(q(x), q(w))) + bias).
+
+    x: (..., k), w: (k, n), bias: (n,) or None, activation: None | 'relu'.
+    Backends whose registry entry defines a fused epilogue run dequant,
+    bias and activation in-kernel (batched over the leading dims); all
+    others use the unfused composition. Backward is the straight-through
+    estimator either way.
+    """
+    if activation not in (None, "relu"):
+        raise ValueError(f"unsupported activation {activation!r}")
+    if bias is None:
+        return _qmm(x, w, cfg, activation)
+    return _qmm_bias(x, w, bias, cfg, activation)
 
 
-def _qmm_fwd(x, w, cfg: QuantConfig):
+def _qmm_forward(x, w, bias, cfg: QuantConfig, activation):
+    backend = _resolve_backend(cfg)
     lead = x.shape[:-1]
     k = x.shape[-1]
-    x2 = x.reshape(-1, k)
-    sx = abs_max_scale(x2)                        # per-tensor activation scale
+    n = w.shape[1]
+    sx = abs_max_scale(x, axis=None, keepdims=False)  # per-tensor act scale
     if cfg.per_channel:
         sw = abs_max_scale(w, axis=0, keepdims=True)   # (1, n)
     else:
         sw = abs_max_scale(w)
-    x_q = quantize(x2, sx)
     w_q = quantize(w, sw)
-    y = integer_matmul(x_q, w_q, cfg).astype(jnp.float32) * (sx * sw)
-    y = y.reshape(*lead, w.shape[1]).astype(x.dtype)
-    return y, (x, w)
+
+    if backend.fused is not None and cfg.fuse_epilogue:
+        # (B, T, K): leading dims become the kernel's batch grid axis
+        if x.ndim <= 2:
+            x3 = x.reshape(-1, k)
+        else:
+            x3 = x.reshape(-1, x.shape[-2], k)
+        x_q = quantize(x3, sx)
+        scale = jnp.broadcast_to((sx * sw).reshape(1, -1), (1, n))
+        b_arr = (jnp.zeros((1, n), jnp.float32) if bias is None
+                 else bias.astype(jnp.float32).reshape(1, n))
+        y = backend.fused(x_q, w_q, cfg, scale, b_arr,
+                          activation == "relu")
+    else:
+        x_q = quantize(x.reshape(-1, k), sx)
+        y = backend.fn(x_q, w_q, cfg).astype(jnp.float32) * (sx * sw)
+        if bias is not None:
+            y = y + bias.astype(jnp.float32)
+        if activation == "relu":
+            y = jnp.maximum(y, 0.0)
+    return y.reshape(*lead, n).astype(x.dtype)
 
 
-def _qmm_bwd(cfg, res, g):
-    x, w = res
-    lead = x.shape[:-1]
+def _qmm_grads(x, w, y, g, activation):
+    # y is saved in the residuals only when the STE mask needs it
+    if activation == "relu":
+        g = g * (y > 0).astype(g.dtype)
     g2 = g.reshape(-1, w.shape[1]).astype(jnp.float32)
     x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
     dx = (g2 @ w.astype(jnp.float32).T).reshape(x.shape).astype(x.dtype)
     dw = (x2.T @ g2).astype(w.dtype)
+    return dx, dw, g2.sum(axis=0)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _qmm(x, w, cfg, activation):
+    return _qmm_forward(x, w, None, cfg, activation)
+
+
+def _qmm_fwd(x, w, cfg, activation):
+    y = _qmm_forward(x, w, None, cfg, activation)
+    return y, (x, w, y if activation == "relu" else None)
+
+
+def _qmm_bwd(cfg, activation, res, g):
+    x, w, y = res
+    dx, dw, _ = _qmm_grads(x, w, y, g, activation)
     return dx, dw
 
 
-quantized_matmul.defvjp(_qmm_fwd, _qmm_bwd)
+_qmm.defvjp(_qmm_fwd, _qmm_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _qmm_bias(x, w, b, cfg, activation):
+    return _qmm_forward(x, w, b, cfg, activation)
+
+
+def _qmm_bias_fwd(x, w, b, cfg, activation):
+    y = _qmm_forward(x, w, b, cfg, activation)
+    return y, (x, w, b, y if activation == "relu" else None)
+
+
+def _qmm_bias_bwd(cfg, activation, res, g):
+    x, w, b, y = res
+    dx, dw, db = _qmm_grads(x, w, y, g, activation)
+    return dx, dw, db.reshape(b.shape).astype(b.dtype)
+
+
+_qmm_bias.defvjp(_qmm_bias_fwd, _qmm_bias_bwd)

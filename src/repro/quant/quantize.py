@@ -19,20 +19,31 @@ QMAX = 127.0
 class QuantConfig:
     """Quantized-execution config for dense/conv layers.
 
-    backend:
-      'bf16'           no quantization (default training dtype)
-      'int8_exact'     W8A8 symmetric, exact integer products
-      'approx_lut'     W8A8, products via the approximate-multiplier LUT
-      'approx_deficit' W8A8, products via the deficit-plane formulation
-                       (bit-identical to approx_lut; Pallas kernel on TPU)
-      'approx_stage1'  beyond-paper: exact MXU matmul minus stage-1 rank-1
-                       corrections (a cheaper, more accurate re-approximation)
+    backend names resolve through the registry in repro.quant.matmul
+    (`register_backend` / `list_backends`). Built-ins:
+      'bf16'                  no quantization (default training dtype)
+      'int8_exact'            W8A8 symmetric, exact integer products
+      'approx_lut'            W8A8, products via the approximate-multiplier
+                              LUT (paper-faithful reference)
+      'approx_deficit'        W8A8, deficit-plane formulation (bit-identical
+                              to approx_lut; gather-free jnp reference)
+      'approx_stage1'         beyond-paper: exact MXU matmul minus stage-1
+                              rank-1 corrections (cheaper re-approximation)
+      'approx_stage1_fused'   bit-identical to approx_stage1, 4 matmuls
+      'approx_deficit_pallas' Pallas kernel, bit-identical to approx_lut;
+                              fused dequant/bias/ReLU epilogue + batching
+      'approx_stage1_pallas'  Pallas stage-1 kernel, fused epilogue
+
+    fuse_epilogue: let backends with an in-kernel epilogue run dequant,
+    bias add and activation fused (set False to force the unfused
+    composition, e.g. for parity checks).
     """
     backend: str = "bf16"
     multiplier: str = "proposed"       # compressor design for approx paths
     structure: str = "proposed"        # multiplier structure
     per_channel: bool = True           # weight scales per output channel
     stochastic_round: bool = False
+    fuse_epilogue: bool = True
 
     @property
     def is_quantized(self) -> bool:
@@ -48,6 +59,8 @@ INT8 = QuantConfig(backend="int8_exact")
 APPROX_LUT = QuantConfig(backend="approx_lut")
 APPROX_DEFICIT = QuantConfig(backend="approx_deficit")
 APPROX_STAGE1 = QuantConfig(backend="approx_stage1")
+APPROX_DEFICIT_PALLAS = QuantConfig(backend="approx_deficit_pallas")
+APPROX_STAGE1_PALLAS = QuantConfig(backend="approx_stage1_pallas")
 
 
 def abs_max_scale(x: jax.Array, axis=None, keepdims=True) -> jax.Array:

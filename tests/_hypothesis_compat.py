@@ -1,0 +1,90 @@
+"""Offline-safe stand-in for the subset of `hypothesis` the suite uses.
+
+When the real library is installed it is re-exported untouched (full
+shrinking/fuzzing behavior). When it is absent (the CI container has no
+network), `@given` degrades to a deterministic seeded sweep: each strategy
+draws `max_examples` (capped) samples from a numpy Generator seeded by the
+test name, so runs are reproducible and failures re-fire on the same
+inputs. Supported strategies: integers, floats, lists — extend `_Shim*`
+below if a test needs more.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import zlib
+
+    import numpy as np
+
+    _SHIM_CAP = 25          # sweep size ceiling: keep offline CI fast
+
+    class _Integers:
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def draw(self, rng):
+            return int(rng.integers(self.lo, self.hi + 1))
+
+    class _Floats:
+        def __init__(self, lo, hi, allow_nan=False, allow_infinity=False):
+            self.lo, self.hi = lo, hi
+
+        def draw(self, rng):
+            return float(rng.uniform(self.lo, self.hi))
+
+    class _Lists:
+        def __init__(self, elem, min_size=0, max_size=10):
+            self.elem, self.lo, self.hi = elem, min_size, max_size
+
+        def draw(self, rng):
+            n = int(rng.integers(self.lo, self.hi + 1))
+            return [self.elem.draw(rng) for _ in range(n)]
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def floats(min_value, max_value, allow_nan=False,
+                   allow_infinity=False):
+            return _Floats(min_value, max_value, allow_nan, allow_infinity)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            return _Lists(elements, min_size, max_size)
+
+    st = _Strategies()
+
+    def settings(max_examples=20, deadline=None, **_kw):
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            def wrapper():
+                n = min(getattr(wrapper, "_shim_max_examples", 20),
+                        _SHIM_CAP)
+                rng = np.random.default_rng(
+                    zlib.adler32(fn.__name__.encode()))
+                for _ in range(n):
+                    fn(*(s.draw(rng) for s in strats))
+            # deliberately no functools.wraps: pytest would follow
+            # __wrapped__ and treat the original args as fixtures
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco
+
+
+strategies = st
+
+__all__ = ["given", "settings", "st", "strategies", "HAVE_HYPOTHESIS"]

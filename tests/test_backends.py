@@ -1,0 +1,157 @@
+"""Registry-driven backend parity suite.
+
+Enumerates `repro.quant.matmul.list_backends()` so a newly registered
+backend is covered automatically:
+
+  (a) every entry with an `oracle` is bit-identical to that oracle
+      pre-dequant (Pallas kernels vs their jnp references) across odd
+      shapes, blocks and compressor designs;
+  (b) the fused epilogue (dequant + bias + ReLU, per-tensor and
+      per-channel) matches the unfused composition;
+  (c) batched leading dims match the flattened reference.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.approx_matmul import approx_matmul_pallas
+from repro.quant.quantize import QuantConfig
+from repro.quant import matmul as QM
+
+RNG = np.random.default_rng(11)
+
+ORACLED = [n for n in QM.list_backends() if QM.get_backend(n).oracle]
+FUSED = [n for n in QM.list_backends() if QM.get_backend(n).fused]
+
+
+def _rand_q(*shape):
+    return jnp.asarray(RNG.integers(-127, 128, shape).astype(np.int8))
+
+
+def _rand_f(*shape, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape).astype(np.float32) * scale)
+
+
+def test_registry_shape():
+    names = QM.list_backends()
+    assert len(names) == len(set(names))
+    for must in ("int8_exact", "approx_lut", "approx_deficit",
+                 "approx_stage1", "approx_deficit_pallas",
+                 "approx_stage1_pallas"):
+        assert must in names
+    with pytest.raises(KeyError, match="unknown quant backend"):
+        QM.get_backend("no_such_backend")
+    with pytest.raises(ValueError, match="already registered"):
+        QM.register_backend("int8_exact", lambda x, w, c: None)
+
+
+# -- (a) pre-dequant bit-identity vs the registered oracle ------------------
+
+@pytest.mark.parametrize("name", ORACLED)
+@pytest.mark.parametrize("m,k,n", [(8, 8, 8), (5, 7, 3), (9, 33, 17)])
+def test_backend_matches_oracle(name, m, k, n):
+    be = QM.get_backend(name)
+    cfg = QuantConfig(backend=name)
+    x, w = _rand_q(m, k), _rand_q(k, n)
+    got = be.fn(x, w, cfg)
+    want = QM.get_backend(be.oracle).fn(x, w, cfg)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                  err_msg=f"{name} vs {be.oracle}")
+
+
+@pytest.mark.parametrize("block", [(8, 8, 8), (16, 8, 16), (8, 16, 8)])
+@pytest.mark.parametrize("kv", [1, 4, 8])
+def test_deficit_pallas_block_kv_sweep(block, kv):
+    """Block/kv tilings are implementation detail: all bit-identical."""
+    x, w = _rand_q(19, 21), _rand_q(21, 13)
+    cfg = QuantConfig(backend="approx_lut")
+    want = QM.get_backend("approx_lut").fn(x, w, cfg)
+    got = approx_matmul_pallas(x, w, block=block, kv=kv, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("design", ["proposed", "design12", "design17_d2"])
+def test_deficit_pallas_design_sweep(design):
+    x, w = _rand_q(10, 12), _rand_q(12, 9)
+    cfg = QuantConfig(backend="approx_lut", multiplier=design)
+    want = QM.get_backend("approx_lut").fn(x, w, cfg)
+    got = QM.get_backend("approx_deficit_pallas").fn(
+        x, w, dataclasses.replace(cfg, backend="approx_deficit_pallas"))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                  err_msg=design)
+
+
+def test_integer_matmul_routes_through_registry():
+    x, w = _rand_q(6, 16), _rand_q(16, 5)
+    a = QM.integer_matmul(x, w, QuantConfig(backend="approx_deficit_pallas"))
+    b = QM.integer_matmul(x, w, QuantConfig(backend="approx_lut"))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# -- (b) fused epilogue == unfused composition ------------------------------
+
+@pytest.mark.parametrize("name", FUSED)
+@pytest.mark.parametrize("per_channel", [True, False])
+@pytest.mark.parametrize("with_bias,activation", [
+    (False, None), (True, None), (True, "relu")])
+def test_fused_epilogue_matches_unfused(name, per_channel, with_bias,
+                                        activation):
+    x = _rand_f(6, 33)
+    w = _rand_f(33, 17, scale=0.1)
+    bias = _rand_f(17, scale=0.05) if with_bias else None
+    fused_cfg = QuantConfig(backend=name, per_channel=per_channel)
+    unfused_cfg = dataclasses.replace(fused_cfg, fuse_epilogue=False)
+    yf = QM.quantized_matmul(x, w, fused_cfg, bias=bias,
+                             activation=activation)
+    yu = QM.quantized_matmul(x, w, unfused_cfg, bias=bias,
+                             activation=activation)
+    # same integer accumulator; epilogue differs only by float op order
+    np.testing.assert_allclose(np.asarray(yf), np.asarray(yu),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("name", FUSED)
+def test_fused_epilogue_grads(name):
+    cfg = QuantConfig(backend=name)
+    x, w, b = _rand_f(4, 16), _rand_f(16, 5, scale=0.1), _rand_f(5)
+
+    def loss(x, w, b):
+        return QM.quantized_matmul(x, w, cfg, bias=b,
+                                   activation="relu").sum()
+
+    dx, dw, db = jax.grad(loss, argnums=(0, 1, 2))(x, w, b)
+    for g, ref in ((dx, x), (dw, w), (db, b)):
+        assert g.shape == ref.shape
+        assert np.all(np.isfinite(np.asarray(g)))
+    assert float(jnp.abs(db).sum()) > 0
+
+
+# -- (c) batched leading dims == flattened reference ------------------------
+
+@pytest.mark.parametrize("name", FUSED)
+@pytest.mark.parametrize("lead", [(2, 7), (3,), (2, 2, 5)])
+def test_batched_lead_dims_match_flat(name, lead):
+    cfg = QuantConfig(backend=name)
+    x = _rand_f(*lead, 33)
+    w = _rand_f(33, 17, scale=0.1)
+    y = QM.quantized_matmul(x, w, cfg)
+    y_flat = QM.quantized_matmul(x.reshape(-1, 33), w, cfg)
+    assert y.shape == (*lead, 17)
+    np.testing.assert_array_equal(np.asarray(y).reshape(-1, 17),
+                                  np.asarray(y_flat))
+
+
+def test_batched_bias_relu_matches_flat():
+    cfg = QuantConfig(backend="approx_deficit_pallas")
+    x = _rand_f(2, 5, 24)
+    w = _rand_f(24, 9, scale=0.1)
+    b = _rand_f(9, scale=0.05)
+    y = QM.quantized_matmul(x, w, cfg, bias=b, activation="relu")
+    y_flat = QM.quantized_matmul(x.reshape(-1, 24), w, cfg, bias=b,
+                                 activation="relu")
+    np.testing.assert_array_equal(np.asarray(y).reshape(-1, 9),
+                                  np.asarray(y_flat))
+    assert bool(jnp.all(y >= 0))

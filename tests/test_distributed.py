@@ -15,7 +15,7 @@ import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as PS
 from repro.configs import registry
 from repro.models import transformer_lm as TLM
-from repro.parallel.sharding import DEFAULT_RULES
+from repro.parallel.sharding import DEFAULT_RULES, use_mesh
 from repro.launch.specs import model_state_specs
 from repro.nn import module as M
 
@@ -33,7 +33,7 @@ loss1 = float(TLM.forward_loss(params, batch, cfg, training=False))
 
 # sharded 4x2 mesh
 mesh = jax.make_mesh((4, 2), ("data", "model"))
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     specs = M.param_shardings(TLM.descs(cfg), DEFAULT_RULES, mesh)
     from repro.parallel.sharding import prune_spec
     p_sh = jax.tree.map(

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.launch.hlo_costs import HloCost
+from repro.launch.hlo_costs import HloCost, builtin_cost_analysis
 
 M = N = K = 64
 LAYERS = 7
@@ -40,7 +40,7 @@ def test_scan_trip_count_correction():
     assert hu.flops == pytest.approx(LAYERS * flops_one, rel=0.01)
     # builtin analysis undercounts the scanned version (sanity check of the
     # premise; if XLA ever fixes this, the walker stays correct)
-    builtin = jax.jit(scanned).lower(x, ws).compile().cost_analysis()
+    builtin = builtin_cost_analysis(jax.jit(scanned).lower(x, ws).compile())
     assert builtin["flops"] <= hs.flops + 1
 
 

@@ -12,6 +12,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import json
 import jax, jax.numpy as jnp
 from repro.parallel.pipeline import pipeline_apply
+from repro.parallel.sharding import use_mesh
 
 mesh = jax.make_mesh((4,), ("stage",))
 S, M, B, D = 4, 6, 2, 8
@@ -28,7 +29,7 @@ ref = mb
 for s in range(S):
     ref = jnp.tanh(ref @ ws[s])
 
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     out = pipeline_apply(stage_fn, mesh, ws, mb)
 err = float(jnp.max(jnp.abs(out - ref)))
 print(json.dumps({"err": err}))
