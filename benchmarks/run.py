@@ -44,9 +44,9 @@ def main() -> None:
         elif name == "table5":
             accs = {r["design"]: r["acc"] for r in rows
                     if r["model"] == "lenet5"}
-            if "approx[proposed]" in accs and "bf16" in accs:
+            if "approx_lut" in accs and "bf16" in accs:
                 derived = (f"lenet_approx_minus_exact="
-                           f"{accs['approx[proposed]'] - accs['bf16']:.2f}pp")
+                           f"{accs['approx_lut'] - accs['bf16']:.2f}pp")
         elif name == "fig7":
             derived = f"rows={len(rows)}"
         csv.append(f"{name},{dt:.0f},{derived}")

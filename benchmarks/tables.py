@@ -1,28 +1,21 @@
 """One benchmark per paper table/figure. Each returns rows + prints a
-side-by-side (reproduced vs paper) report. Used by benchmarks.run."""
+side-by-side (reproduced vs paper) report. Used by benchmarks.run.
+
+Row construction for the deterministic tables (2/3/4) is shared with the
+evaluation harness (`repro.eval.paper_tables`), so `python -m repro.eval`
+and `python -m benchmarks.run` can never disagree on those. The task
+benchmarks (table5/fig7) reuse the harness's backend sweep but keep their
+own --quick/--full training budgets, so their absolute accuracies differ
+from the harness suites' — compare deltas, not rows.
+"""
 from __future__ import annotations
 
-import time
 from typing import Dict, List
 
-import numpy as np
-
 from repro.core import compressors as C
-from repro.core import hwproxy as HW
-from repro.core import metrics as X
-from repro.core import multiplier as M
+from repro.eval import paper_tables as PT
 
-
-# Paper Table 2 (proposed multiplier structure, all compressor designs)
-PAPER_TABLE2 = {
-    "design12": (68.498, 0.596, 3.496),
-    "design15": (65.425, 0.673, 3.531),
-    "single_error": (6.994, 0.046, 0.109),
-    "design16_d2": (86.326, 1.879, 9.551),
-    "design17_d2": (21.296, 0.162, 0.578),
-    "design13": (95.681, 1.565, 20.276),
-    "proposed": (6.994, 0.046, 0.109),
-}
+PAPER_TABLE2 = PT.PAPER_TABLE2  # re-export (historical import site)
 
 
 def table1_compressor() -> List[Dict]:
@@ -47,72 +40,45 @@ def table1_compressor() -> List[Dict]:
 def table2_error_metrics() -> List[Dict]:
     """Paper Table 2: exhaustive ER/NMED/MRED of the proposed 8x8 structure
     for every compressor design."""
-    exact = X.exhaustive_exact()
-    rows = []
-    for name, (er_p, nmed_p, mred_p) in PAPER_TABLE2.items():
-        t0 = time.time()
-        t = M.exhaustive_products(M.proposed_multiplier(name))
-        m = X.evaluate(t, exact)
-        rows.append({"design": name,
-                     "er": round(m.er_pct, 3), "er_paper": er_p,
-                     "nmed": round(m.nmed_pct, 3), "nmed_paper": nmed_p,
-                     "mred": round(m.mred_pct, 3), "mred_paper": mred_p,
-                     "us_per_call": (time.time() - t0) * 1e6})
-        print(f"table2: {name:14s} ER {m.er_pct:7.3f} (paper {er_p:7.3f})  "
-              f"NMED {m.nmed_pct:6.3f} ({nmed_p:6.3f})  "
-              f"MRED {m.mred_pct:7.3f} ({mred_p:7.3f})")
+    rows = PT.table2_rows()
+    for r in rows:
+        print(f"table2: {r['design']:14s} ER {r['er']:7.3f} "
+              f"(paper {r['er_paper']:7.3f})  "
+              f"NMED {r['nmed']:6.3f} ({r['nmed_paper']:6.3f})  "
+              f"MRED {r['mred']:7.3f} ({r['mred_paper']:7.3f})")
     return rows
-
-
-def _rank_corr(a, b):
-    ra = np.argsort(np.argsort(a))
-    rb = np.argsort(np.argsort(b))
-    return float(np.corrcoef(ra, rb)[0, 1])
 
 
 def table3_compressor_hw() -> List[Dict]:
     """Paper Table 3 via the unit-gate proxy; reports Spearman rank
     correlation between proxy and paper PDP (absolute uW/ps need silicon)."""
-    rows = []
-    proxy_pdp, paper_pdp = [], []
-    for name, paper in HW.PAPER_TABLE3.items():
-        nl = HW.COMPRESSORS[name]
-        rows.append({"design": name, "area_u": nl.area,
-                     "delay_u": nl.delay, "energy_u": nl.energy,
-                     "pdp_u": nl.pdp, "paper_area": paper[0],
-                     "paper_pdp": paper[3], "err_prob": paper[4]})
-        proxy_pdp.append(nl.pdp)
-        paper_pdp.append(paper[3])
-        print(f"table3: {name:18s} proxy(a={nl.area:5.1f} d={nl.delay:4.1f} "
-              f"pdp={nl.pdp:6.2f}u)  paper(a={paper[0]:5.2f}um2 "
-              f"pdp={paper[3]:.3f}fJ)")
-    rc = _rank_corr(np.array(proxy_pdp), np.array(paper_pdp))
-    print(f"table3: PDP rank correlation proxy-vs-paper = {rc:.3f}")
-    prop, exact = HW.COMPRESSORS["proposed"], HW.COMPRESSORS["exact"]
-    print(f"table3: proposed/exact energy = {prop.energy / exact.energy:.3f}"
-          f"  (paper: {1.12 / 1.99:.3f})")
+    rows = PT.table3_rows()
+    for r in rows:
+        print(f"table3: {r['design']:18s} proxy(a={r['area_u']:5.1f} "
+              f"d={r['delay_u']:4.1f} pdp={r['pdp_u']:6.2f}u)  "
+              f"paper(a={r['paper_area']:5.2f}um2 "
+              f"pdp={r['paper_pdp']:.3f}fJ)")
+    s = PT.table3_summary(rows)
+    print(f"table3: PDP rank correlation proxy-vs-paper = "
+          f"{s['pdp_rank_corr']:.3f}")
+    print(f"table3: proposed/exact energy = "
+          f"{s['proposed_over_exact_energy']:.3f}"
+          f"  (paper: {s['paper_proposed_over_exact_energy']:.3f})")
     return rows
 
 
 def table4_multiplier_hw() -> List[Dict]:
     """Paper Table 4: multiplier-level proxy metrics + exhaustive MRED for
     the three structures."""
-    exact_tab = X.exhaustive_exact()
-    rows = []
-    for comp in ["design12", "design15", "design16_d2", "design17_d2",
-                 "design13", "single_error", "proposed"]:
-        hwm = HW.multiplier_proxy(comp)
-        row = {"design": comp, **{k: round(v, 2) for k, v in hwm.items()}}
-        for struct, mk in (("design1", M.design1_multiplier),
-                           ("design2", M.design2_multiplier),
-                           ("proposed", M.proposed_multiplier)):
-            m = X.evaluate(M.exhaustive_products(mk(comp)), exact_tab)
-            row[f"mred_{struct}"] = round(m.mred_pct, 3)
-        rows.append(row)
-        print(f"table4: {comp:14s} proxy-pdp={row['pdp']:9.1f}u  MRED% "
-              f"d1={row['mred_design1']:6.3f} d2={row['mred_design2']:6.3f} "
+    rows = PT.table4_rows()
+    for row in rows:
+        print(f"table4: {row['design']:14s} proxy-pdp={row['pdp']:9.1f}u  "
+              f"MRED% d1={row['mred_design1']:6.3f} "
+              f"d2={row['mred_design2']:6.3f} "
               f"prop={row['mred_proposed']:7.3f}")
-    print("table4: paper proposed-multiplier row: MRED 0.023/0.715/0.109 %")
+    mred = PT.PAPER_TABLE4_PROPOSED_MRED
+    print(f"table4: paper proposed-multiplier row: MRED "
+          f"{mred[0]}/{mred[1]}/{mred[2]} %")
     return rows
 
 
@@ -121,9 +87,9 @@ def table5_mnist(quick: bool = True) -> List[Dict]:
 
     Synthetic digits stand in for MNIST (offline container — DESIGN.md §2);
     the paper's claim is the exact-vs-approx DELTA, reproduced here."""
+    from repro.eval import runners
     from repro.models import cnn as CNN
     from repro.train import cnn_train as T
-    from repro.quant.quantize import QuantConfig, BF16
 
     steps = 150 if quick else 600
     rows = []
@@ -131,43 +97,31 @@ def table5_mnist(quick: bool = True) -> List[Dict]:
             ("keras_cnn", CNN.keras_cnn_descs(), CNN.keras_cnn_apply),
             ("lenet5", CNN.lenet5_descs(), CNN.lenet5_apply)):
         params = T.train_classifier(descs, apply_fn, steps=steps, qat=True)
-        for backend, mult in (("bf16", "proposed"),
-                              ("int8_exact", "proposed"),
-                              ("approx_lut", "proposed"),
-                              ("approx_lut", "design13"),
-                              ("approx_lut", "design16_d2"),
-                              ("approx_stage1", "proposed")):
-            q = (BF16 if backend == "bf16"
-                 else QuantConfig(backend=backend, multiplier=mult))
+        for tag, backend, mult in runners.sweep_points(variants=True):
+            q = runners.quant_for(backend, mult)
             acc = T.eval_classifier(params, apply_fn, q)
-            tag = backend if backend != "approx_lut" else f"approx[{mult}]"
             rows.append({"model": model_name, "design": tag, "acc": acc})
-            print(f"table5: {model_name:10s} {tag:22s} acc={acc:6.2f}%")
+            print(f"table5: {model_name:10s} {tag:28s} acc={acc:6.2f}%")
     return rows
 
 
 def fig7_denoising(quick: bool = True) -> List[Dict]:
     """Paper Figs 7-8: FFDNet denoising PSNR/SSIM, exact vs approx conv."""
+    from repro.eval import runners
     from repro.models import cnn as CNN
     from repro.train import cnn_train as T
-    from repro.quant.quantize import QuantConfig, BF16
 
     cfg = CNN.FFDNetConfig(depth=6, width=32)
     params = T.train_denoiser(cfg, steps=150 if quick else 500, qat=True)
     rows = []
     for sigma in (25.0, 50.0):
-        for backend, mult in (("bf16", "proposed"),
-                              ("int8_exact", "proposed"),
-                              ("approx_lut", "proposed"),
-                              ("approx_lut", "design13")):
-            q = (BF16 if backend == "bf16"
-                 else QuantConfig(backend=backend, multiplier=mult))
+        for tag, backend, mult in runners.sweep_points(variants=True):
+            q = runners.quant_for(backend, mult)
             psnr, ssim, noisy_psnr = T.eval_denoiser(params, cfg, q,
                                                      sigma=sigma)
-            tag = backend if backend != "approx_lut" else f"approx[{mult}]"
             rows.append({"sigma": sigma, "design": tag, "psnr": psnr,
                          "ssim": ssim, "noisy_psnr": noisy_psnr})
-            print(f"fig7: sigma={sigma:4.0f} {tag:22s} "
+            print(f"fig7: sigma={sigma:4.0f} {tag:28s} "
                   f"PSNR={psnr:6.2f}dB (noisy {noisy_psnr:5.2f})  "
                   f"SSIM={ssim:.4f}")
     return rows

@@ -21,6 +21,10 @@ class ErrorMetrics:
                 f"MRED={self.mred_pct:.3f}%  MED={self.med:.3f}  "
                 f"maxED={self.max_ed}")
 
+    def to_dict(self) -> dict:
+        """JSON-ready flat dict (repro.eval artifact rows)."""
+        return dataclasses.asdict(self)
+
 
 def evaluate(approx: np.ndarray, exact: np.ndarray) -> ErrorMetrics:
     """Compute ER/NMED/MRED over paired approx/exact outputs.

@@ -1,0 +1,141 @@
+"""``python -m repro.eval`` — run suites, render tables, sync docs.
+
+Commands:
+  run       execute suites, write `<out>/<suite>.json` + `<suite>.md`
+  render    re-render `<suite>.md` from existing JSON artifacts (no compute)
+  docs      inject the rendered tables into docs/reproduce.md between
+            `<!-- eval:<suite>:begin/end -->` markers (--check verifies the
+            committed docs are byte-identical to the regenerated tables)
+  backends  list the registered quant backends swept by the task suites
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+from typing import List, Optional
+
+def _repo_root() -> Path:
+    # src-layout checkout: src/repro/eval/cli.py -> repo root. For a
+    # site-packages install that heuristic lands in the python prefix, so
+    # require the docs tree as a fingerprint and fall back to cwd (where
+    # --out/--docs-path can still override everything).
+    root = Path(__file__).resolve().parents[3]
+    if (root / "docs" / "reproduce.md").exists():
+        return root
+    return Path.cwd()
+
+
+REPO_ROOT = _repo_root()
+DEFAULT_OUT = REPO_ROOT / "experiments" / "eval"
+# where example wrappers / ad-hoc runs write, so they never dirty the
+# committed artifacts that docs --check validates against
+SCRATCH_OUT = REPO_ROOT / "experiments" / "scratch"
+DOCS_PATH = REPO_ROOT / "docs" / "reproduce.md"
+
+
+def _parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.eval",
+        description="Paper-evaluation harness (see docs/reproduce.md)")
+    sub = ap.add_subparsers(dest="command", required=True)
+
+    run = sub.add_parser("run", help="execute suites and write artifacts")
+    run.add_argument("--suite", default="all",
+                     choices=["denoise", "mnist", "metrics", "hw", "all"])
+    run.add_argument("--smoke", action="store_true",
+                     help="minute-scale budgets (CI gate); same sweep "
+                          "structure as the full run")
+    run.add_argument("--seed", type=int, default=0)
+    run.add_argument("--out", type=Path, default=DEFAULT_OUT)
+
+    rend = sub.add_parser("render",
+                          help="re-render markdown from JSON artifacts")
+    rend.add_argument("--suite", default="all",
+                      choices=["denoise", "mnist", "metrics", "hw", "all"])
+    rend.add_argument("--out", type=Path, default=DEFAULT_OUT)
+
+    docs = sub.add_parser("docs", help="sync tables into docs/reproduce.md")
+    docs.add_argument("--out", type=Path, default=DEFAULT_OUT,
+                      help="artifact directory to render from")
+    docs.add_argument("--docs-path", type=Path, default=DOCS_PATH)
+    docs.add_argument("--check", action="store_true",
+                      help="verify instead of write; exit 1 on drift")
+
+    sub.add_parser("backends", help="list registered quant backends")
+    return ap
+
+
+def _cmd_run(args) -> int:
+    from repro.eval import artifacts
+    from repro.eval.runners import SUITES, render_artifact, resolve_suites
+    out: Path = args.out
+    out.mkdir(parents=True, exist_ok=True)
+    for name in resolve_suites(args.suite):
+        t0 = time.time()
+        art = SUITES[name].run(smoke=args.smoke, seed=args.seed)
+        artifacts.save(out / f"{name}.json", art)
+        (out / f"{name}.md").write_text(render_artifact(art))
+        print(f"[repro.eval] {name:8s} {time.time() - t0:6.1f}s -> "
+              f"{out / (name + '.json')}")
+    return 0
+
+
+def _cmd_render(args) -> int:
+    from repro.eval import artifacts
+    from repro.eval.runners import render_artifact, resolve_suites
+    for name in resolve_suites(args.suite):
+        path = args.out / f"{name}.json"
+        if not path.exists():
+            print(f"[repro.eval] missing artifact {path} (run the suite "
+                  f"first)", file=sys.stderr)
+            return 1
+        (args.out / f"{name}.md").write_text(
+            render_artifact(artifacts.load(path)))
+        print(f"[repro.eval] rendered {args.out / (name + '.md')}")
+    return 0
+
+
+def _cmd_docs(args) -> int:
+    from repro.eval import artifacts, markdown
+    from repro.eval.runners import render_artifact
+    text = args.docs_path.read_text()
+    drift = []
+    for name in markdown.block_names(text):
+        path = args.out / f"{name}.json"
+        if not path.exists():
+            print(f"[repro.eval] missing artifact {path} for docs block "
+                  f"{name!r}", file=sys.stderr)
+            return 1
+        rendered = render_artifact(artifacts.load(path))
+        current = markdown.extract_block(text, name)
+        # byte-exact against what inject_block would write, so --check
+        # passing guarantees `docs` is a no-op
+        if current != "\n" + rendered:
+            drift.append(name)
+        text = markdown.inject_block(text, name, rendered)
+    if args.check:
+        if drift:
+            print(f"[repro.eval] docs drift in blocks: {drift} "
+                  f"(run `python -m repro.eval docs` to update)")
+            return 1
+        print("[repro.eval] docs tables match regenerated artifacts")
+        return 0
+    args.docs_path.write_text(text)
+    print(f"[repro.eval] updated {args.docs_path} "
+          f"({'no changes' if not drift else 'blocks: ' + ', '.join(drift)})")
+    return 0
+
+
+def _cmd_backends(args) -> int:
+    from repro.quant.matmul import backend_notes
+    for name, note in backend_notes().items():
+        print(f"{name:24s} {note}")
+    return 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = _parser().parse_args(argv)
+    return {"run": _cmd_run, "render": _cmd_render, "docs": _cmd_docs,
+            "backends": _cmd_backends}[args.command](args)

@@ -1,0 +1,99 @@
+"""Image-quality metrics for the denoising suite (paper §5.2, Figs 7-8).
+
+PSNR and SSIM in the standard formulations used by the denoising
+literature the paper compares against: SSIM with an 11x11 Gaussian window
+(sigma 1.5, Wang et al. 2004), computed per channel over VALID positions
+and averaged. ``ssim_global`` keeps the previous single-window variant
+(adequate for coarse deltas; the harness reports the windowed one).
+
+All functions accept (H, W), (H, W, C) or (B, H, W, C) arrays and treat
+every leading/batch element as part of one mean — matching how the paper
+reports a single PSNR/SSIM per test set.
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _as_nhwc(x: jax.Array) -> jax.Array:
+    x = jnp.asarray(x)
+    if x.ndim == 2:
+        return x[None, :, :, None]
+    if x.ndim == 3:
+        return x[None]
+    if x.ndim == 4:
+        return x
+    raise ValueError(f"expected (H,W), (H,W,C) or (B,H,W,C); got {x.shape}")
+
+
+def psnr(a: jax.Array, b: jax.Array, max_val: float = 1.0) -> jax.Array:
+    """Peak signal-to-noise ratio in dB (mse floored at 1e-12)."""
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    mse = jnp.mean((a - b) ** 2)
+    return (20.0 * jnp.log10(max_val)
+            - 10.0 * jnp.log10(jnp.maximum(mse, 1e-12)))
+
+
+@lru_cache(maxsize=8)
+def _gaussian_window(size: int, sigma: float) -> np.ndarray:
+    x = np.arange(size, dtype=np.float64) - (size - 1) / 2.0
+    g = np.exp(-(x ** 2) / (2.0 * sigma ** 2))
+    g /= g.sum()
+    return np.outer(g, g).astype(np.float32)
+
+
+def _filter(x: jax.Array, kern: jax.Array) -> jax.Array:
+    """Depthwise VALID correlation of (B,H,W,C) with a (k,k) window."""
+    c = x.shape[-1]
+    k = jnp.broadcast_to(kern[:, :, None, None],
+                         kern.shape + (1, c))
+    return jax.lax.conv_general_dilated(
+        x, k, (1, 1), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c)
+
+
+def ssim(a: jax.Array, b: jax.Array, *, max_val: float = 1.0,
+         win_size: int = 11, sigma: float = 1.5,
+         k1: float = 0.01, k2: float = 0.03) -> jax.Array:
+    """Mean structural similarity with a Gaussian window (Wang et al. 2004).
+
+    The window shrinks (to the next odd size) on images smaller than
+    ``win_size`` so tiny smoke-suite crops stay well defined.
+    """
+    a4 = _as_nhwc(jnp.asarray(a, jnp.float32))
+    b4 = _as_nhwc(jnp.asarray(b, jnp.float32))
+    if a4.shape != b4.shape:
+        raise ValueError(f"shape mismatch: {a4.shape} vs {b4.shape}")
+    win = min(win_size, a4.shape[1], a4.shape[2])
+    if win % 2 == 0:
+        win -= 1
+    kern = jnp.asarray(_gaussian_window(win, sigma))
+
+    c1 = (k1 * max_val) ** 2
+    c2 = (k2 * max_val) ** 2
+    mu_a = _filter(a4, kern)
+    mu_b = _filter(b4, kern)
+    var_a = _filter(a4 * a4, kern) - mu_a ** 2
+    var_b = _filter(b4 * b4, kern) - mu_b ** 2
+    cov = _filter(a4 * b4, kern) - mu_a * mu_b
+    ssim_map = (((2.0 * mu_a * mu_b + c1) * (2.0 * cov + c2))
+                / ((mu_a ** 2 + mu_b ** 2 + c1) * (var_a + var_b + c2)))
+    return jnp.mean(ssim_map)
+
+
+def ssim_global(a: jax.Array, b: jax.Array, c1: float = 0.01 ** 2,
+                c2: float = 0.03 ** 2) -> jax.Array:
+    """Single-window SSIM over global statistics (legacy coarse variant)."""
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    mu_a, mu_b = a.mean(), b.mean()
+    va, vb = a.var(), b.var()
+    cov = ((a - mu_a) * (b - mu_b)).mean()
+    return ((2 * mu_a * mu_b + c1) * (2 * cov + c2)
+            / ((mu_a ** 2 + mu_b ** 2 + c1) * (va + vb + c2)))

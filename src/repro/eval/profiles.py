@@ -1,0 +1,98 @@
+"""Per-backend error/energy profiles joined into the task tables.
+
+The paper argues task quality *together with* multiplier error metrics and
+silicon cost; the harness therefore annotates every task row (PSNR/SSIM,
+accuracy) with the exhaustive ER/NMED/MRED of the multiplier that backend
+emulates and the unit-gate energy/PDP proxy of the corresponding hardware.
+
+Families:
+  bf16                  float compute — no integer products, no proxy
+  int8_*                exact products; hardware proxy = exact-compressor
+                        multiplier
+  approx_lut/deficit/*  the paper's gate-level multiplier for the selected
+                        compressor design (exhaustive table from
+                        core.multiplier)
+  approx_stage1*        the MXU re-approximation (exhaustive table from
+                        quant.matmul.stage1_exhaustive_products); executed
+                        on exact MXU hardware, so no unit-gate proxy
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+from typing import Dict, Optional
+
+from repro.core import hwproxy as HW
+from repro.core import metrics as X
+from repro.core import multiplier as M
+from repro.quant import matmul as QM
+
+# Family roots: the backends whose exhaustive product table is known
+# first-hand. Every other registered backend inherits its family by
+# walking its declared `oracle` chain (a backend bit-identical to
+# approx_lut realizes the paper multiplier, etc.), so backends added via
+# register_backend(oracle=...) get correct profile columns for free.
+_ROOT_FAMILY = {
+    "int8_exact": "exact",
+    "approx_lut": "paper",
+    "approx_stage1": "stage1",
+}
+
+
+def _family(backend: str) -> Optional[str]:
+    name = backend
+    seen = set()
+    while name not in _ROOT_FAMILY:
+        if name in seen:
+            return None
+        seen.add(name)
+        try:
+            oracle = QM.get_backend(name).oracle
+        except KeyError:          # not a registered backend (e.g. bf16)
+            return None
+        if oracle is None:
+            return None
+        name = oracle
+    return _ROOT_FAMILY[name]
+
+
+@lru_cache(maxsize=32)
+def _metrics(family: str, mult: str) -> Optional[X.ErrorMetrics]:
+    exact = X.exhaustive_exact()
+    if family == "exact":
+        return X.evaluate(exact, exact)
+    if family == "paper":
+        return X.evaluate(
+            M.exhaustive_products(M.proposed_multiplier(mult)), exact)
+    if family == "stage1":
+        return X.evaluate(QM.stage1_exhaustive_products(), exact)
+    return None
+
+
+def backend_profile(backend: str, multiplier: str = "proposed") -> Dict:
+    """Flat dict of er/nmed/mred (%) + proxy energy/pdp for one backend.
+
+    Values are None (rendered as an em dash) where the concept does not
+    apply: bf16 runs no integer products; the stage1 family executes on
+    exact MXU hardware so a unit-gate multiplier proxy would be
+    meaningless.
+    """
+    family = _family(backend)
+    m = _metrics(family, multiplier) if family else None
+    d = m.to_dict() if m is not None else {}
+    row: Dict = {
+        "er": None if m is None else round(d["er_pct"], 3),
+        "nmed": None if m is None else round(d["nmed_pct"], 3),
+        "mred": None if m is None else round(d["mred_pct"], 3),
+        "proxy_energy": None,
+        "proxy_pdp": None,
+    }
+    if family == "exact":
+        hwm = HW.multiplier_proxy("exact")
+    elif family == "paper":
+        hwm = HW.multiplier_proxy(multiplier)
+    else:
+        hwm = None
+    if hwm is not None:
+        row["proxy_energy"] = round(hwm["energy"], 2)
+        row["proxy_pdp"] = round(hwm["pdp"], 2)
+    return row

@@ -123,18 +123,8 @@ def ffdnet_apply(params, noisy, sigma, cfg: FFDNetConfig = FFDNetConfig(),
 
 
 # ---------------------------------------------------------------------------
-# metrics
+# metrics — canonical implementations live in repro.eval.image; these
+# aliases keep the historical CNN.psnr / CNN.ssim call sites working.
 # ---------------------------------------------------------------------------
 
-def psnr(a, b):
-    mse = jnp.mean((a - b) ** 2)
-    return -10.0 * jnp.log10(jnp.maximum(mse, 1e-12))
-
-
-def ssim(a, b, c1=0.01 ** 2, c2=0.03 ** 2):
-    """Global-statistics SSIM (single window) — adequate for deltas."""
-    mu_a, mu_b = a.mean(), b.mean()
-    va, vb = a.var(), b.var()
-    cov = ((a - mu_a) * (b - mu_b)).mean()
-    return ((2 * mu_a * mu_b + c1) * (2 * cov + c2)
-            / ((mu_a ** 2 + mu_b ** 2 + c1) * (va + vb + c2)))
+from repro.eval.image import psnr, ssim_global as ssim  # noqa: E402,F401

@@ -274,6 +274,31 @@ def list_backends() -> Tuple[str, ...]:
     return tuple(_REGISTRY)
 
 
+def backend_notes() -> Dict[str, str]:
+    """name -> one-line description, for reports and docs tables."""
+    return {name: be.note for name, be in _REGISTRY.items()}
+
+
+def stage1_exhaustive_products() -> np.ndarray:
+    """(256, 256) int64 product table of the stage-1 re-approximation over
+    the unsigned 8x8 domain: a*b minus every STAGE1_SITES correction whose
+    4-bit operand windows are all ones. This is the multiplier the
+    approx_stage1* backends emulate, in the same exhaustive-table form
+    `core.multiplier.exhaustive_products` uses, so `core.metrics.evaluate`
+    can score it against the paper designs."""
+    a = np.arange(256, dtype=np.int64)
+    out = a[:, None] * a[None, :]
+    for col, ra, rb in STAGE1_SITES:
+        ua = np.ones(256, np.int64)
+        for i in range(ra, ra + 4):
+            ua &= (a >> i) & 1
+        ub = np.ones(256, np.int64)
+        for i in range(rb, rb + 4):
+            ub &= (a >> i) & 1
+        out = out - ((ua[:, None] * ub[None, :]) << col)
+    return out
+
+
 def _deficit_pallas(x_q, w_q, cfg: QuantConfig) -> jax.Array:
     from repro.kernels import ops as kops
     return kops.approx_matmul(x_q, w_q, cfg)

@@ -1,46 +1,77 @@
-"""Small supervised training helpers for the paper's application models
-(classification on synthetic digits, denoising on synthetic textures)."""
+"""Reusable fit/eval loops for the paper's application models
+(classification on synthetic digits, denoising on synthetic textures).
+
+``fit`` is the one SGD loop: init params + AdamW, jit one step, stream
+batches. ``train_classifier`` / ``train_denoiser`` only differ in their
+loss and batch stream; the eval helpers are what `repro.eval.runners`
+sweeps across backends (examples/ and benchmarks/ call the same four
+functions, so there is exactly one training recipe in the repo).
+"""
 from __future__ import annotations
 
 import functools
-from typing import Callable, Dict, Tuple
+from typing import Callable, Iterable, List, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.data import synthetic
+from repro.eval import image as IQ
 from repro.models import cnn as CNN
 from repro.nn import module as M
 from repro.optim import adamw
 from repro.quant.quantize import QuantConfig, BF16
 
 
+def fit(descs, loss_fn: Callable, batches: Iterable[Tuple], *, steps: int,
+        lr: float, seed: int = 0, weight_decay: float = 0.0):
+    """Generic supervised loop: returns (params, per-step losses).
+
+    loss_fn(params, *batch) -> scalar; `batches` yields the *batch tuples
+    (already array-convertible). One jit'd AdamW step, `steps` iterations.
+    """
+    params = M.init_params(descs, jax.random.PRNGKey(seed))
+    ocfg = adamw.AdamWConfig(lr=lr, weight_decay=weight_decay)
+    opt = adamw.init(descs, ocfg)
+
+    @jax.jit
+    def step(p, o, *batch):
+        l, g = jax.value_and_grad(loss_fn)(p, *batch)
+        p, o = adamw.update(g, o, p, ocfg)
+        return p, o, l
+
+    losses: List[jax.Array] = []
+    for _, batch in zip(range(steps), batches):
+        params, opt, l = step(params, opt,
+                              *(jnp.asarray(b) for b in batch))
+        losses.append(l)
+    return params, [float(l) for l in losses]
+
+
+# ---------------------------------------------------------------------------
+# classification (paper §5.1, Table 5)
+# ---------------------------------------------------------------------------
+
 def train_classifier(descs, apply_fn, *, steps=300, batch=64, lr=2e-3,
                      n_train=5000, seed=0, qat=False,
                      quant: QuantConfig = BF16):
     """Train on synthetic digits (paper §5.1 uses 5000 train / 500 test)."""
     imgs, labels = synthetic.digits(n_train, seed=seed)
-    params = M.init_params(descs, jax.random.PRNGKey(seed))
-    ocfg = adamw.AdamWConfig(lr=lr, weight_decay=0.0)
-    opt = adamw.init(descs, ocfg)
 
     def loss_fn(p, x, y):
         logits = apply_fn(p, x, quant, qat)
         one = jax.nn.log_softmax(logits.astype(jnp.float32))
         return -jnp.take_along_axis(one, y[:, None], 1).mean()
 
-    @jax.jit
-    def step(p, o, x, y):
-        l, g = jax.value_and_grad(loss_fn)(p, x, y)
-        p, o = adamw.update(g, o, p, ocfg)
-        return p, o, l
+    def batches():
+        rng = np.random.default_rng(seed)
+        while True:
+            idx = rng.integers(0, n_train, batch)
+            yield imgs[idx], labels[idx]
 
-    rng = np.random.default_rng(seed)
-    for i in range(steps):
-        idx = rng.integers(0, n_train, batch)
-        params, opt, l = step(params, opt, jnp.asarray(imgs[idx]),
-                              jnp.asarray(labels[idx]))
+    params, _ = fit(descs, loss_fn, batches(), steps=steps, lr=lr,
+                    seed=seed)
     return params
 
 
@@ -56,45 +87,43 @@ def eval_classifier(params, apply_fn, quant: QuantConfig, *, n_test=500,
     return 100.0 * correct / n_test
 
 
+# ---------------------------------------------------------------------------
+# denoising (paper §5.2, Figs 7-8)
+# ---------------------------------------------------------------------------
+
 def train_denoiser(cfg: CNN.FFDNetConfig, *, steps=200, batch=8, lr=1e-3,
                    size=64, sigmas=(15., 25., 50.), seed=0, qat=False,
                    quant: QuantConfig = BF16):
-    descs = CNN.ffdnet_descs(cfg)
-    params = M.init_params(descs, jax.random.PRNGKey(seed))
-    ocfg = adamw.AdamWConfig(lr=lr, weight_decay=0.0)
-    opt = adamw.init(descs, ocfg)
     clean = synthetic.textures(256, size=size, seed=seed)
 
     def loss_fn(p, noisy, target, sg):
         out = CNN.ffdnet_apply(p, noisy, sg, cfg, quant, qat)
         return jnp.mean((out - target) ** 2)
 
-    @jax.jit
-    def step(p, o, noisy, target, sg):
-        l, g = jax.value_and_grad(loss_fn)(p, noisy, target, sg)
-        p, o = adamw.update(g, o, p, ocfg)
-        return p, o, l
+    def batches():
+        rng = np.random.default_rng(seed)
+        while True:
+            idx = rng.integers(0, clean.shape[0], batch)
+            sig = rng.choice(sigmas, batch).astype(np.float32)
+            tgt = clean[idx]
+            noisy = tgt + (sig[:, None, None, None] / 255.0) * \
+                rng.standard_normal(tgt.shape).astype(np.float32)
+            yield noisy, tgt, sig / 255.0
 
-    rng = np.random.default_rng(seed)
-    for i in range(steps):
-        idx = rng.integers(0, clean.shape[0], batch)
-        sig = rng.choice(sigmas, batch).astype(np.float32)
-        tgt = clean[idx]
-        noisy = tgt + (sig[:, None, None, None] / 255.0) * \
-            rng.standard_normal(tgt.shape).astype(np.float32)
-        params, opt, l = step(params, opt, jnp.asarray(noisy),
-                              jnp.asarray(tgt),
-                              jnp.asarray(sig / 255.0))
+    params, _ = fit(CNN.ffdnet_descs(cfg), loss_fn, batches(), steps=steps,
+                    lr=lr, seed=seed)
     return params
 
 
 def eval_denoiser(params, cfg: CNN.FFDNetConfig, quant: QuantConfig, *,
                   sigma=25.0, n=16, size=64, seed=3):
+    """(denoised PSNR dB, Gaussian-window SSIM, noisy PSNR dB)."""
     clean = synthetic.textures(n, size=size, seed=seed)
     noisy = synthetic.add_noise(clean, sigma, seed=seed + 1)
     fn = jax.jit(functools.partial(CNN.ffdnet_apply, cfg=cfg, quant=quant))
     out = fn(params, jnp.asarray(noisy), jnp.float32(sigma / 255.0))
-    out = np.asarray(jnp.clip(out, 0, 1))
-    return (float(CNN.psnr(jnp.asarray(out), jnp.asarray(clean))),
-            float(CNN.ssim(jnp.asarray(out), jnp.asarray(clean))),
-            float(CNN.psnr(jnp.asarray(noisy), jnp.asarray(clean))))
+    out = jnp.clip(out, 0, 1)
+    clean_j = jnp.asarray(clean)
+    return (float(IQ.psnr(out, clean_j)),
+            float(IQ.ssim(out, clean_j)),
+            float(IQ.psnr(jnp.asarray(noisy), clean_j)))

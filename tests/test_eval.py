@@ -1,0 +1,199 @@
+"""Tier-1 coverage for the evaluation harness (repro.eval).
+
+ - PSNR / Gaussian-window SSIM against hand-computed references
+ - deterministic markdown rendering + docs marker injection
+ - JSON artifact schema round-trip and validation
+ - a smoke run of every suite through the real CLI, checked for backend
+   coverage and (for the deterministic suites) byte-identical tables
+   against the committed artifacts
+"""
+import math
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.eval import artifacts, image, markdown
+from repro.eval.cli import DEFAULT_OUT, main
+from repro.eval.runners import SUITE_ORDER, sweep_points
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+# ---------------------------------------------------------------------------
+# image metrics
+# ---------------------------------------------------------------------------
+
+def test_psnr_hand_computed():
+    a = np.zeros((8, 8), np.float32)
+    b = np.full((8, 8), 0.5, np.float32)
+    # mse = 0.25 -> -10 log10(0.25) = 6.0206 dB
+    assert abs(float(image.psnr(a, b)) - 6.0205999) < 1e-4
+    c = np.full((8, 8), 0.1, np.float32)
+    # mse = 0.01 -> 20 dB
+    assert abs(float(image.psnr(a, c)) - 20.0) < 1e-4
+
+
+def test_psnr_identical_is_floor_capped():
+    a = np.linspace(0, 1, 64, dtype=np.float32).reshape(8, 8)
+    assert abs(float(image.psnr(a, a)) - 120.0) < 1e-4
+
+
+def test_ssim_identical_is_one():
+    rng = np.random.default_rng(0)
+    a = rng.random((16, 16, 1)).astype(np.float32)
+    assert abs(float(image.ssim(a, a)) - 1.0) < 1e-5
+
+
+def test_ssim_constant_images_closed_form():
+    # zero variance/covariance: ssim = (2 m1 m2 + c1) / (m1^2 + m2^2 + c1)
+    m1, m2, c1 = 0.25, 0.75, 0.01 ** 2
+    a = np.full((16, 16), m1, np.float32)
+    b = np.full((16, 16), m2, np.float32)
+    expected = (2 * m1 * m2 + c1) / (m1 ** 2 + m2 ** 2 + c1)
+    # float32 cancellation in the windowed moments costs a few 1e-5
+    assert abs(float(image.ssim(a, b)) - expected) < 2e-4
+
+
+def test_ssim_penalizes_noise_and_is_symmetric():
+    rng = np.random.default_rng(1)
+    a = rng.random((2, 24, 24, 1)).astype(np.float32)
+    b = np.clip(a + 0.2 * rng.standard_normal(a.shape).astype(np.float32),
+                0, 1)
+    s_ab, s_ba = float(image.ssim(a, b)), float(image.ssim(b, a))
+    assert s_ab < 0.95
+    assert abs(s_ab - s_ba) < 1e-5
+    # small images: window shrinks instead of failing
+    assert abs(float(image.ssim(a[:, :5, :5], a[:, :5, :5])) - 1.0) < 1e-5
+
+
+def test_ssim_global_still_available():
+    a = np.full((8, 8), 0.5, np.float32)
+    assert abs(float(image.ssim_global(a, a)) - 1.0) < 1e-6
+
+
+def test_ssim_shape_mismatch_raises():
+    with pytest.raises(ValueError):
+        image.ssim(np.zeros((8, 8)), np.zeros((9, 9)))
+
+
+# ---------------------------------------------------------------------------
+# markdown rendering + marker injection
+# ---------------------------------------------------------------------------
+
+def test_markdown_table_exact_bytes():
+    rows = [{"name": "a", "x": 1.5, "y": None},
+            {"name": "b", "x": 2.25}]
+    cols = (("name", "Name", None), ("x", "X", ".2f"), ("y", "Y", ".1f"))
+    got = markdown.markdown_table(rows, cols)
+    assert got == ("| Name | X | Y |\n"
+                   "| --- | --- | --- |\n"
+                   "| a | 1.50 | — |\n"
+                   "| b | 2.25 | — |\n")
+    assert got == markdown.markdown_table(rows, cols)  # deterministic
+
+
+def test_marker_inject_extract_roundtrip():
+    doc = ("intro\n<!-- eval:foo:begin -->\nold\n<!-- eval:foo:end -->\n"
+           "outro\n")
+    new = markdown.inject_block(doc, "foo", "new content\n")
+    assert markdown.extract_block(new, "foo").strip() == "new content"
+    assert markdown.block_names(new) == ["foo"]
+    assert "outro" in new and "intro" in new
+    with pytest.raises(ValueError):
+        markdown.inject_block(doc, "missing", "x")
+
+
+# ---------------------------------------------------------------------------
+# artifact schema
+# ---------------------------------------------------------------------------
+
+def test_artifact_roundtrip(tmp_path):
+    art = artifacts.make_artifact(
+        "demo", {"t": [{"a": 1, "b": 2.5, "c": None, "d": "x"}]},
+        {"smoke": True, "seed": 0})
+    path = tmp_path / "demo.json"
+    artifacts.save(path, art)
+    loaded = artifacts.load(path)
+    assert loaded == art
+    assert loaded["schema_version"] == artifacts.SCHEMA_VERSION
+
+
+def test_artifact_validation_rejects_bad_schemas():
+    good = artifacts.make_artifact("demo", {"t": [{"a": 1}]}, {})
+    with pytest.raises(ValueError):
+        artifacts.validate({**good, "schema_version": 999})
+    with pytest.raises(ValueError):
+        artifacts.validate({k: v for k, v in good.items() if k != "tables"})
+    with pytest.raises(ValueError):
+        artifacts.validate({**good, "tables": {}})
+    with pytest.raises(ValueError):
+        artifacts.validate({**good, "tables": {"t": [{"a": [1, 2]}]}})
+    with pytest.raises(ValueError):
+        artifacts.validate({**good, "tables": {"t": "not-rows"}})
+
+
+# ---------------------------------------------------------------------------
+# suites through the real CLI (smoke budgets)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def smoke_run(tmp_path_factory):
+    out = tmp_path_factory.mktemp("eval")
+    assert main(["run", "--suite", "all", "--smoke",
+                 "--out", str(out)]) == 0
+    return out
+
+
+def test_smoke_run_writes_valid_artifacts(smoke_run):
+    for suite in SUITE_ORDER:
+        art = artifacts.load(smoke_run / f"{suite}.json")
+        assert art["suite"] == suite
+        assert art["config"]["smoke"] is True
+        assert (smoke_run / f"{suite}.md").exists()
+
+
+def test_smoke_task_suites_cover_every_backend(smoke_run):
+    labels = {label for label, _, _ in sweep_points(variants=True)}
+    from repro.quant.matmul import list_backends
+    assert set(list_backends()) <= labels
+    for suite, tname in (("mnist", "mnist"), ("denoise", "denoise")):
+        rows = artifacts.load(smoke_run / f"{suite}.json")["tables"][tname]
+        assert {r["backend"] for r in rows} == labels
+        for r in rows:
+            key = "acc" if suite == "mnist" else "psnr"
+            assert isinstance(r[key], float) and math.isfinite(r[key])
+
+
+def test_deterministic_suites_match_committed_tables(smoke_run):
+    # metrics/hw involve no training: their rendered tables must be
+    # byte-identical to the committed artifacts on any machine
+    for suite in ("metrics", "hw"):
+        fresh = (smoke_run / f"{suite}.md").read_text()
+        committed = (DEFAULT_OUT / f"{suite}.md").read_text()
+        assert fresh == committed, f"{suite} tables drifted"
+
+
+def test_docs_tables_in_sync_with_artifacts():
+    # docs/reproduce.md embeds renderings of the committed artifacts
+    assert main(["docs", "--check"]) == 0
+
+
+def test_render_command_roundtrips(smoke_run):
+    md_before = (smoke_run / "metrics.md").read_text()
+    assert main(["render", "--suite", "metrics",
+                 "--out", str(smoke_run)]) == 0
+    assert (smoke_run / "metrics.md").read_text() == md_before
+
+
+def test_module_entrypoint_runs():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    out = subprocess.run([sys.executable, "-m", "repro.eval", "backends"],
+                         env=env, capture_output=True, text=True,
+                         timeout=300, cwd=ROOT)
+    assert out.returncode == 0, out.stderr[-1500:]
+    assert "approx_deficit_pallas" in out.stdout
