@@ -1,0 +1,104 @@
+"""LM serving micro-benchmark: prefill/decode tokens-per-second per backend.
+
+Sweeps bf16 + every registered quant backend through the jitted
+prefill/decode path of a reduced smollm-family decoder — the same
+per-token-scale configuration the `lm` eval suite and the serving loop use
+— and reports tokens-per-second for one prefill shot and a greedy decode
+loop. Wall-times are CPU reference numbers (the `*_pallas` entries run in
+interpret mode off-TPU and are expected to be slow there); the relative
+bf16/int8/approx ordering on real hardware comes from the roofline model.
+
+`benchmarks/run.py --only lm` writes the rows to
+``experiments/bench_lm.json`` using the same versioned artifact schema as
+the eval suites, so the serving-throughput trajectory can be diffed across
+PRs exactly like the quality tables.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _bench_point(cfg, params, toks, max_len: int, decode_steps: int,
+                 reps: int) -> Dict[str, float]:
+    from repro.models import transformer_lm as TLM
+
+    b, plen = toks.shape
+    prefill = jax.jit(lambda p, t, c: TLM.prefill(p, t, cfg, c))
+    decode = jax.jit(lambda p, t, pos, c: TLM.decode_step(p, t, pos, cfg, c))
+
+    def one_prefill():
+        caches = TLM.init_cache(cfg, b, max_len, jnp.float32)
+        logits, caches = prefill(params, toks, caches)
+        return logits, caches
+
+    logits, caches0 = jax.block_until_ready(one_prefill())  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(one_prefill())
+    prefill_s = (time.time() - t0) / reps
+
+    nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    jax.block_until_ready(decode(params, nxt, jnp.int32(plen), caches0))
+    t0 = time.time()
+    caches = caches0
+    tok = nxt
+    for i in range(decode_steps):
+        logits, caches = decode(params, tok, jnp.int32(plen + i), caches)
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    jax.block_until_ready(tok)
+    decode_s = time.time() - t0
+
+    return {"prefill_tok_per_s": b * plen / prefill_s,
+            "decode_tok_per_s": b * decode_steps / decode_s,
+            "prefill_ms": prefill_s * 1e3,
+            "decode_ms_per_step": decode_s / decode_steps * 1e3}
+
+
+def run(quick: bool = True) -> List[Dict]:
+    from repro.eval import lm as LM
+    from repro.eval.runners import sweep_points
+    from repro.models import transformer_lm as TLM
+    from repro.quant.quantize import for_lm
+
+    # same model as the `lm` eval suite, so the throughput trajectory in
+    # bench_lm.json measures exactly the config the quality table scores
+    cfg0 = LM.arch(smoke=quick)
+    if quick:
+        b, plen, decode_steps, reps = 4, 32, 8, 2
+    else:
+        b, plen, decode_steps, reps = 8, 64, 32, 3
+    max_len = plen + decode_steps + 2
+    params = TLM.init(cfg0, jax.random.PRNGKey(0))
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg0.vocab, (b, plen)).astype(np.int32))
+
+    rows = []
+    for label, backend, mult in sweep_points(variants=False):
+        cfg = dataclasses.replace(cfg0, quant=for_lm(backend, mult))
+        r = _bench_point(cfg, params, toks, max_len, decode_steps, reps)
+        rows.append({"backend": label,
+                     "batch": b, "prefill_len": plen,
+                     "decode_steps": decode_steps,
+                     **{k: round(v, 2) for k, v in r.items()}})
+        print(f"lm_perf: {label:22s} prefill {r['prefill_tok_per_s']:9.1f} "
+              f"tok/s  decode {r['decode_tok_per_s']:8.1f} tok/s "
+              f"({r['decode_ms_per_step']:.1f} ms/step)")
+    return rows
+
+
+def artifact(rows: List[Dict], quick: bool) -> Dict:
+    """Wrap the rows in the versioned eval-artifact schema (v1)."""
+    from repro.eval import artifacts
+    return artifacts.make_artifact(
+        "bench_lm", {"lm_perf": rows},
+        {"smoke": bool(quick), "seed": 0,
+         "jax_backend": jax.default_backend(),
+         "act_scale": "per_token",
+         "note": "CPU reference wall-times; *_pallas = interpret mode "
+                 "off-TPU"})

@@ -20,13 +20,14 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table2,table3,table4,table5,"
-                         "fig7,kernels")
+                         "fig7,kernels,lm")
     args = ap.parse_args(sys.argv[1:])
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import tables as T
     from benchmarks import kernel_perf as K
+    from benchmarks import lm_perf as LMP
 
     results = {}
     csv = []
@@ -49,6 +50,11 @@ def main() -> None:
                            f"{accs['approx_lut'] - accs['bf16']:.2f}pp")
         elif name == "fig7":
             derived = f"rows={len(rows)}"
+        elif name == "lm":
+            dec = {r["backend"]: r["decode_tok_per_s"] for r in rows}
+            if "bf16" in dec and "approx_stage1_fused" in dec:
+                derived = (f"stage1_fused_decode_vs_bf16="
+                           f"{dec['approx_stage1_fused'] / dec['bf16']:.2f}x")
         csv.append(f"{name},{dt:.0f},{derived}")
 
     bench("table1", T.table1_compressor)
@@ -58,8 +64,15 @@ def main() -> None:
     bench("table5", lambda: T.table5_mnist(quick=quick))
     bench("fig7", lambda: T.fig7_denoising(quick=quick))
     bench("kernels", lambda: K.run(quick=quick))
+    bench("lm", lambda: LMP.run(quick=quick))
 
     OUT.mkdir(exist_ok=True)
+    if "lm" in results:
+        # versioned standalone artifact: the serving-throughput trajectory
+        # is diffed across PRs like the eval tables (schema v1)
+        from repro.eval import artifacts
+        artifacts.save(OUT / "bench_lm.json",
+                       LMP.artifact(results["lm"], quick))
     (OUT / "bench_results.json").write_text(json.dumps(results, indent=1,
                                                        default=float))
     print("\nname,us_per_call,derived")

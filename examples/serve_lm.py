@@ -1,6 +1,8 @@
 """Serve a small LM with batched requests — the end-to-end inference driver.
 
-The paper's technique plugs in as the quant backend of every projection.
+The paper's technique plugs in as the quant backend of every projection
+(QKV, attention output, MLP, LM head), with per-token activation scales so
+prefill and decode stay bit-identical (docs/quantization.md).
 Run:  PYTHONPATH=src python examples/serve_lm.py [--backend approx_lut]
 """
 import argparse
@@ -12,20 +14,19 @@ import numpy as np
 
 from repro.configs import registry
 from repro.models import transformer_lm as TLM
-from repro.quant.quantize import QuantConfig
+from repro.quant.matmul import list_backends
+from repro.quant.quantize import for_lm
 from repro.train.serve_loop import Server, Request
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--backend", default="bf16",
-                choices=["bf16", "int8_exact", "approx_lut",
-                         "approx_stage1"])
+                choices=["bf16", *list_backends()])
 ap.add_argument("--requests", type=int, default=8)
 ap.add_argument("--max-new", type=int, default=12)
 args = ap.parse_args()
 
 cfg = registry.reduced("smollm-135m", n_layers=4, d_model=128, d_ff=256)
-if args.backend != "bf16":
-    cfg = dataclasses.replace(cfg, quant=QuantConfig(backend=args.backend))
+cfg = dataclasses.replace(cfg, quant=for_lm(args.backend))
 params = TLM.init(cfg, jax.random.PRNGKey(0))
 srv = Server(cfg, params, batch_slots=4, max_len=64)
 rng = np.random.default_rng(0)

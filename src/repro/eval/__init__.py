@@ -5,10 +5,12 @@ Turns the kernel-level reproduction into regenerable task-level claims:
   python -m repro.eval run --suite all --smoke
 
 sweeps every registered quant backend through the paper's two applications
-(denoising PSNR/SSIM, digit-recognition accuracy), re-derives the Table 2
-error-metric zoo and the unit-gate hardware proxies for Tables 3/4, writes
-versioned JSON artifacts under ``experiments/eval/`` and renders the
-markdown comparison tables embedded in ``docs/reproduce.md``.
+(denoising PSNR/SSIM, digit-recognition accuracy) plus the beyond-paper
+decoder-LM suite (perplexity / logit NMED with per-token scales),
+re-derives the Table 2 error-metric zoo and the unit-gate hardware
+proxies for Tables 3/4, writes versioned JSON artifacts under
+``experiments/eval/`` and renders the markdown comparison tables embedded
+in ``docs/reproduce.md``.
 
 Modules (kept import-light here to avoid cycles — ``repro.models.cnn``
 imports :mod:`repro.eval.image` for its metrics):
@@ -18,7 +20,8 @@ imports :mod:`repro.eval.image` for its metrics):
   artifacts    versioned JSON artifact schema (save/load/validate)
   paper_tables Table 2/3/4 row builders shared with benchmarks/tables.py
   profiles     per-backend error metrics + hardware-proxy energy
-  runners      the denoise/mnist/metrics/hw suites
+  lm           the decoder-LM suite (train/eval helpers)
+  runners      the denoise/mnist/metrics/hw/lm suites
   cli          ``python -m repro.eval`` entry point
 """
 from repro.eval.artifacts import SCHEMA_VERSION  # noqa: F401

@@ -28,6 +28,10 @@ def _repo_root() -> Path:
 
 
 REPO_ROOT = _repo_root()
+# help text only — validation happens in runners.resolve_suites, which is
+# imported lazily so the argparse layer stays free of jax
+SUITE_HELP = ("'all', one of metrics/hw/denoise/mnist/lm, or a comma list "
+              "(e.g. 'metrics,hw')")
 DEFAULT_OUT = REPO_ROOT / "experiments" / "eval"
 # where example wrappers / ad-hoc runs write, so they never dirty the
 # committed artifacts that docs --check validates against
@@ -42,8 +46,7 @@ def _parser() -> argparse.ArgumentParser:
     sub = ap.add_subparsers(dest="command", required=True)
 
     run = sub.add_parser("run", help="execute suites and write artifacts")
-    run.add_argument("--suite", default="all",
-                     choices=["denoise", "mnist", "metrics", "hw", "all"])
+    run.add_argument("--suite", default="all", help=SUITE_HELP)
     run.add_argument("--smoke", action="store_true",
                      help="minute-scale budgets (CI gate); same sweep "
                           "structure as the full run")
@@ -52,8 +55,7 @@ def _parser() -> argparse.ArgumentParser:
 
     rend = sub.add_parser("render",
                           help="re-render markdown from JSON artifacts")
-    rend.add_argument("--suite", default="all",
-                      choices=["denoise", "mnist", "metrics", "hw", "all"])
+    rend.add_argument("--suite", default="all", help=SUITE_HELP)
     rend.add_argument("--out", type=Path, default=DEFAULT_OUT)
 
     docs = sub.add_parser("docs", help="sync tables into docs/reproduce.md")
@@ -72,20 +74,46 @@ def _cmd_run(args) -> int:
     from repro.eval.runners import SUITES, render_artifact, resolve_suites
     out: Path = args.out
     out.mkdir(parents=True, exist_ok=True)
-    for name in resolve_suites(args.suite):
+    try:
+        names = resolve_suites(args.suite)
+    except KeyError as e:
+        print(f"[repro.eval] {e.args[0]}", file=sys.stderr)
+        return 2
+    failed = []
+    for name in names:
         t0 = time.time()
-        art = SUITES[name].run(smoke=args.smoke, seed=args.seed)
+        # A raising runner must not take the exit code path by surprise in
+        # CI: run every requested suite, report the failures explicitly,
+        # and exit nonzero if any failed.
+        try:
+            art = SUITES[name].run(smoke=args.smoke, seed=args.seed)
+        except Exception as e:                      # noqa: BLE001
+            import traceback
+            traceback.print_exc()
+            print(f"[repro.eval] FAILED  {name}: {type(e).__name__}: {e}",
+                  file=sys.stderr)
+            failed.append(name)
+            continue
         artifacts.save(out / f"{name}.json", art)
         (out / f"{name}.md").write_text(render_artifact(art))
         print(f"[repro.eval] {name:8s} {time.time() - t0:6.1f}s -> "
               f"{out / (name + '.json')}")
+    if failed:
+        print(f"[repro.eval] {len(failed)} suite(s) failed: {failed}",
+              file=sys.stderr)
+        return 1
     return 0
 
 
 def _cmd_render(args) -> int:
     from repro.eval import artifacts
     from repro.eval.runners import render_artifact, resolve_suites
-    for name in resolve_suites(args.suite):
+    try:
+        names = resolve_suites(args.suite)
+    except KeyError as e:
+        print(f"[repro.eval] {e.args[0]}", file=sys.stderr)
+        return 2
+    for name in names:
         path = args.out / f"{name}.json"
         if not path.exists():
             print(f"[repro.eval] missing artifact {path} (run the suite "
@@ -110,6 +138,10 @@ def _cmd_docs(args) -> int:
             return 1
         rendered = render_artifact(artifacts.load(path))
         current = markdown.extract_block(text, name)
+        if current is None:      # begin marker without a matching end
+            print(f"[repro.eval] docs block {name!r} has a begin marker "
+                  f"but no end marker in {args.docs_path}", file=sys.stderr)
+            return 1
         # byte-exact against what inject_block would write, so --check
         # passing guarantees `docs` is a no-op
         if current != "\n" + rendered:

@@ -1,0 +1,152 @@
+"""LM suite — approximate-transformer inference through the backend registry.
+
+The paper evaluates its multiplier on small CNN tasks only; this suite
+probes the regime the related work (HEAM; Spantidi et al.) identifies as
+qualitatively different — transformer stacks, where *every* projection
+matmul (QKV, attention output, MLP up/down, LM head) is a long signed-int8
+accumulation chain. A small smollm-family decoder is trained once with QAT,
+then evaluated teacher-forced with ``QuantConfig(act_scale='per_token')``
+per sweep point so prefill and decode share bit-identical int accumulators
+(see docs/quantization.md and tests/test_lm_backends.py).
+
+Reported per backend:
+
+  ppl         teacher-forced perplexity on a held-out synthetic stream
+  d_ppl       perplexity delta vs the bf16 reference run
+  logit_nmed  mean |logits − logits_bf16| / max |logits_bf16| (%), the
+              NMED of the full logit tensor — the LM analogue of the
+              paper's multiplier-level NMED
+  + the per-backend ER/NMED/MRED + unit-gate energy proxy columns shared
+    with the CNN suites (repro.eval.profiles)
+
+Prefill/decode tokens-per-second for the same sweep lives in
+``benchmarks/lm_perf.py`` (wall-clock has no place in a results artifact).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+
+def arch(smoke: bool):
+    """Smoke-sized (CI) or small (full) smollm-family config."""
+    from repro.configs import registry
+    if smoke:
+        return registry.reduced(
+            "smollm-135m", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+            d_ff=128, vocab=256, vocab_pad=256, head_dim=16)
+    return registry.reduced(
+        "smollm-135m", n_layers=4, d_model=128, d_ff=256,
+        vocab=512, vocab_pad=512)
+
+
+def budgets(smoke: bool) -> Dict[str, int]:
+    if smoke:
+        return {"steps": 40, "batch": 8, "seq": 32, "eval_seqs": 8}
+    return {"steps": 300, "batch": 16, "seq": 64, "eval_seqs": 32}
+
+
+def train_lm(cfg, steps: int, batch: int, seq: int, seed: int):
+    """QAT-train a tiny decoder on the synthetic zipf stream -> params."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.data import synthetic
+    from repro.models import transformer_lm as TLM
+    from repro.optim import adamw
+    from repro.train import steps as ST
+
+    n_seqs = max(64, 4 * batch)
+    toks = synthetic.token_stream(n_seqs, seq + 1, cfg.vocab, seed=seed)
+    params = TLM.init(cfg, jax.random.PRNGKey(seed))
+    ocfg = adamw.AdamWConfig(lr=2e-3)
+    opt_state = adamw.init(TLM.descs(cfg), ocfg)
+    step_fn = jax.jit(ST.make_train_step(cfg, ocfg, qat=True),
+                      donate_argnums=(0, 1))
+    rng = np.random.default_rng(seed)
+    loss = float("nan")
+    for _ in range(steps):
+        idx = rng.integers(0, n_seqs, batch)
+        batch_d = {"tokens": jnp.asarray(toks[idx, :-1]),
+                   "labels": jnp.asarray(toks[idx, 1:])}
+        params, opt_state, metrics = step_fn(params, opt_state, batch_d)
+        loss = float(metrics["loss"])
+    return params, loss
+
+
+def eval_point(params, cfg, quant, tokens, labels):
+    """Teacher-forced logits + mean CE under one QuantConfig.
+
+    Returns (logits (B, S, vocab) float32 over the true vocab, loss)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models import transformer_lm as TLM
+    from repro.nn import layers as L
+    from repro.parallel.sharding import DEFAULT_RULES
+
+    cfg_q = dataclasses.replace(cfg, quant=quant)
+
+    @jax.jit
+    def fwd(params, tokens, labels):
+        x = TLM.embed_tokens(params, tokens, cfg_q)
+        h, _, _ = TLM.backbone(params, x, cfg_q, DEFAULT_RULES,
+                               training=False)
+        lg = TLM.lm_logits(params, h, cfg_q)
+        loss = L.softmax_cross_entropy(lg, labels, cfg_q.vocab)
+        return lg[..., :cfg_q.vocab].astype(jnp.float32), loss
+
+    lg, loss = fwd(params, tokens, labels)
+    return lg, float(loss)
+
+
+def logit_nmed_pct(logits, ref) -> float:
+    """mean |l − ref| / max |ref| in percent — NMED over the logit tensor."""
+    import numpy as np
+    l, r = np.asarray(logits, np.float64), np.asarray(ref, np.float64)
+    return float(np.abs(l - r).mean() / max(np.abs(r).max(), 1e-12) * 100.0)
+
+
+def run(smoke: bool = False, seed: int = 0) -> Dict:
+    """The `lm` suite runner (registered in repro.eval.runners)."""
+    import math
+
+    import jax.numpy as jnp
+
+    from repro.data import synthetic
+    from repro.eval import artifacts, profiles
+    from repro.eval.runners import _base_config, sweep_points
+    from repro.quant.quantize import for_lm
+
+    cfg = arch(smoke)
+    b = budgets(smoke)
+    params, train_loss = train_lm(cfg, b["steps"], b["batch"], b["seq"],
+                                  seed)
+    eval_toks = synthetic.token_stream(b["eval_seqs"], b["seq"] + 1,
+                                       cfg.vocab, seed=seed + 7)
+    tokens = jnp.asarray(eval_toks[:, :-1])
+    labels = jnp.asarray(eval_toks[:, 1:])
+
+    rows: List[Dict] = []
+    ref_logits, ref_ppl = None, None
+    for label, backend, mult in sweep_points(variants=True):
+        lg, loss = eval_point(params, cfg, for_lm(backend, mult),
+                              tokens, labels)
+        ppl = round(math.exp(loss), 3)
+        if label == "bf16":
+            ref_logits, ref_ppl = lg, ppl
+        rows.append({
+            "backend": label,
+            "ppl": ppl,
+            # delta of the *rounded* ppls so the published columns stay
+            # mutually consistent to the displayed digits
+            "d_ppl": round(ppl - ref_ppl, 3),
+            "logit_nmed": round(logit_nmed_pct(lg, ref_logits), 4),
+            **profiles.backend_profile(backend, mult),
+        })
+
+    config = {**_base_config(smoke, seed), "arch": cfg.name,
+              "n_layers": cfg.n_layers, "d_model": cfg.d_model,
+              "d_ff": cfg.d_ff, "vocab": cfg.vocab,
+              "act_scale": "per_token", "train_loss": round(train_loss, 4),
+              **{k: int(v) for k, v in b.items()}}
+    return artifacts.make_artifact("lm", {"lm": rows}, config)

@@ -8,6 +8,8 @@ error metrics and hardware proxies from :mod:`repro.eval.profiles`:
   hw        paper Tables 3/4 — unit-gate proxy (area/energy/delay/PDP)
   denoise   paper §5.2 / Figs 7-8 — FFDNet PSNR/SSIM per backend per sigma
   mnist     paper §5.1 / Table 5 — LeNet-5 accuracy per backend
+  lm        beyond paper — decoder-LM perplexity + logit NMED per backend
+            (repro.eval.lm; the transformer stack through the registry)
 
 ``smoke`` swaps the paper-scale budgets for minute-scale ones (tiny model,
 few steps, small eval sets) without changing the sweep structure — every
@@ -133,6 +135,11 @@ def run_mnist(smoke: bool = False, seed: int = 0) -> Dict:
     return artifacts.make_artifact("mnist", {"mnist": rows}, config)
 
 
+def run_lm(smoke: bool = False, seed: int = 0) -> Dict:
+    from repro.eval import lm as LM
+    return LM.run(smoke=smoke, seed=seed)
+
+
 # ---------------------------------------------------------------------------
 # Suite registry + markdown rendering
 # ---------------------------------------------------------------------------
@@ -229,18 +236,36 @@ SUITES: Dict[str, Suite] = {
             "Paper Table 5 (LeNet-5 on MNIST): exact 98.24, proposed "
             "96.45, design [13] 91.66.")},
         doc="LeNet-5 classification accuracy backend sweep"),
+    "lm": Suite(
+        "lm", run_lm,
+        {"lm": TableSpec(
+            "Decoder LM — perplexity and logit NMED per backend "
+            "(beyond paper)",
+            (("backend", "backend", None), ("ppl", "ppl", ".3f"),
+             ("d_ppl", "Δppl vs bf16", "+.3f"),
+             ("logit_nmed", "logit NMED %", ".4f")) + _PROFILE_COLS,
+            "smollm-family decoder (QAT-trained on a synthetic zipf "
+            "stream), every projection — QKV, attention output, MLP, LM "
+            "head — through the selected backend with per-token activation "
+            "scales (prefill/decode bit parity; see docs/quantization.md). "
+            "Logit NMED is mean |Δlogit| / max |logit_bf16| vs the bf16 "
+            "reference.")},
+        doc="decoder-LM perplexity/logit-NMED backend sweep"),
 }
 
-SUITE_ORDER = ("metrics", "hw", "denoise", "mnist")
+SUITE_ORDER = ("metrics", "hw", "denoise", "mnist", "lm")
 
 
 def resolve_suites(name: str) -> Sequence[str]:
+    """'all', a suite name, or a comma list ('metrics,hw') -> run order."""
     if name == "all":
         return SUITE_ORDER
-    if name not in SUITES:
-        raise KeyError(f"unknown suite {name!r}; choose from "
-                       f"{SUITE_ORDER + ('all',)}")
-    return (name,)
+    names = tuple(n.strip() for n in name.split(",") if n.strip())
+    unknown = [n for n in names if n not in SUITES]
+    if unknown or not names:
+        raise KeyError(f"unknown suite(s) {unknown or [name]}; choose from "
+                       f"{SUITE_ORDER + ('all',)} (comma lists allowed)")
+    return names
 
 
 def render_artifact(art: Dict) -> str:

@@ -351,14 +351,20 @@ def embed_tokens(params, tokens, cfg: ArchConfig):
 
 
 def lm_logits(params, hidden, cfg: ArchConfig,
-              rules: ShardingRules = DEFAULT_RULES):
+              rules: ShardingRules = DEFAULT_RULES, *, qat: bool = False):
+    """Final projection to vocab. Quantized configs dispatch through the
+    backend registry like every other projection (the LM head is the widest
+    matmul in the stack); multi-codebook heads stay float — the per-codebook
+    einsum has no (k, n) registry lowering yet (documented in
+    docs/quantization.md)."""
     if cfg.n_codebooks > 1:
         out = jnp.einsum("bsd,cvd->bscv", hidden, params["lm_head"]["table"],
                          preferred_element_type=jnp.float32)
         return constrain(out, rules, "batch", "seq", None, "vocab")
     table = (params["lm_head"]["table"] if "lm_head" in params
              else params["embed"]["table"])
-    out = L.logits({"table": table}, hidden, true_vocab=cfg.vocab)
+    out = L.logits({"table": table}, hidden, true_vocab=cfg.vocab,
+                   quant=cfg.quant, qat=qat)
     return constrain(out, rules, "batch", "seq", "vocab")
 
 
@@ -371,7 +377,7 @@ def forward_loss(params, batch, cfg: ArchConfig,
     enc = batch.get("enc")
     h, _, aux = backbone(params, x, cfg, rules, enc=enc, qat=qat,
                          training=training)
-    lg = lm_logits(params, h, cfg)
+    lg = lm_logits(params, h, cfg, qat=qat)
     labels = batch["labels"]
     if cfg.n_codebooks > 1:
         loss = L.softmax_cross_entropy(

@@ -94,10 +94,29 @@ def embed(params, ids):
     return jnp.take(params["table"], ids, axis=0)
 
 
-def logits(params, x, true_vocab: Optional[int] = None):
-    """x @ table.T with optional masking of padded vocab entries."""
-    out = jnp.einsum("...d,vd->...v", x, params["table"],
-                     preferred_element_type=jnp.float32)
+def logits(params, x, true_vocab: Optional[int] = None,
+           quant: Optional[QuantConfig] = None, qat: bool = False):
+    """x @ table.T with optional masking of padded vocab entries.
+
+    When `quant` is a quantized config, the projection executes through
+    the backend registry like every other LM matmul — the LM head is the
+    widest projection in the stack, so it must not silently stay exact
+    when the rest runs approximate. Under QAT (`qat=True`) it mirrors
+    `dense`: float einsum over fake-quantized weights (per-vocab-row
+    scales, matching the deployed per-channel quantization), so the head
+    trains against the same quantization noise it will serve with.
+    """
+    table = params["table"]
+    if qat:
+        table = fake_quant_per_channel(table, axis=0)   # per vocab row
+        out = jnp.einsum("...d,vd->...v", x, table,
+                         preferred_element_type=jnp.float32)
+    elif quant is not None and quant.is_quantized:
+        out = quantized_matmul(x, table.T, quant)
+        out = out.astype(jnp.float32)
+    else:
+        out = jnp.einsum("...d,vd->...v", x, table,
+                         preferred_element_type=jnp.float32)
     if true_vocab is not None and true_vocab < out.shape[-1]:
         neg = jnp.finfo(jnp.float32).min
         mask = jnp.arange(out.shape[-1]) < true_vocab

@@ -389,12 +389,38 @@ def quantized_matmul(x: jax.Array, w: jax.Array, cfg: QuantConfig,
     return _qmm_bias(x, w, bias, cfg, activation)
 
 
+def _float_epilogue(y, bias, activation):
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
 def _qmm_forward(x, w, bias, cfg: QuantConfig, activation):
+    """Shared quantize -> backend -> dequant/epilogue composition.
+
+    act_scale='per_tensor': one dynamic scale for the whole activation;
+    fused backends run dequant + bias + activation in-kernel.
+
+    act_scale='per_token': each activation row m carries its own dynamic
+    scale sx[m], so a token's int8 codes — and hence the backend's int32
+    accumulators — are independent of which other tokens share the batch.
+    This is what makes prefill and decode bit-identical pre-dequant (the
+    LM parity contract, tests/test_lm_backends.py). Fused backends still
+    run their kernel: it applies the per-channel weight dequant in its
+    epilogue (scale = sw, zero bias) and the row scale / bias / activation
+    are applied outside — the integer accumulators are identical to the
+    unfused composition either way.
+    """
     backend = _resolve_backend(cfg)
     lead = x.shape[:-1]
     k = x.shape[-1]
     n = w.shape[1]
-    sx = abs_max_scale(x, axis=None, keepdims=False)  # per-tensor act scale
+    per_token = cfg.act_scale == "per_token"
+    if not per_token and cfg.act_scale != "per_tensor":
+        raise ValueError(f"unknown act_scale {cfg.act_scale!r}; "
+                         "choose 'per_tensor' or 'per_token'")
     if cfg.per_channel:
         sw = abs_max_scale(w, axis=0, keepdims=True)   # (1, n)
     else:
@@ -407,19 +433,29 @@ def _qmm_forward(x, w, bias, cfg: QuantConfig, activation):
             x3 = x.reshape(-1, k)
         else:
             x3 = x.reshape(-1, x.shape[-2], k)
-        x_q = quantize(x3, sx)
-        scale = jnp.broadcast_to((sx * sw).reshape(1, -1), (1, n))
-        b_arr = (jnp.zeros((1, n), jnp.float32) if bias is None
-                 else bias.astype(jnp.float32).reshape(1, n))
-        y = backend.fused(x_q, w_q, cfg, scale, b_arr,
-                          activation == "relu")
+        if per_token:
+            sx = abs_max_scale(x3, axis=-1, keepdims=True)  # (..., M, 1)
+            x_q = quantize(x3, sx)
+            scale = jnp.broadcast_to(
+                jnp.asarray(sw, jnp.float32).reshape(1, -1), (1, n))
+            y = backend.fused(x_q, w_q, cfg, scale,
+                              jnp.zeros((1, n), jnp.float32), False)
+            y = _float_epilogue(y * sx, bias, activation)
+        else:
+            sx = abs_max_scale(x3, axis=None, keepdims=False)
+            x_q = quantize(x3, sx)
+            scale = jnp.broadcast_to((sx * sw).reshape(1, -1), (1, n))
+            b_arr = (jnp.zeros((1, n), jnp.float32) if bias is None
+                     else bias.astype(jnp.float32).reshape(1, n))
+            y = backend.fused(x_q, w_q, cfg, scale, b_arr,
+                              activation == "relu")
     else:
-        x_q = quantize(x.reshape(-1, k), sx)
+        x2 = x.reshape(-1, k)
+        sx = abs_max_scale(x2, axis=-1 if per_token else None,
+                           keepdims=per_token)   # (M, 1) | scalar
+        x_q = quantize(x2, sx)
         y = backend.fn(x_q, w_q, cfg).astype(jnp.float32) * (sx * sw)
-        if bias is not None:
-            y = y + bias.astype(jnp.float32)
-        if activation == "relu":
-            y = jnp.maximum(y, 0.0)
+        y = _float_epilogue(y, bias, activation)
     return y.reshape(*lead, n).astype(x.dtype)
 
 

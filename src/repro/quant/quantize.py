@@ -37,11 +37,20 @@ class QuantConfig:
     fuse_epilogue: let backends with an in-kernel epilogue run dequant,
     bias add and activation fused (set False to force the unfused
     composition, e.g. for parity checks).
+
+    act_scale selects how activation scales are computed at runtime:
+      'per_tensor'  one dynamic scale over the whole activation tensor
+                    (default; the CNN suites' behaviour)
+      'per_token'   one dynamic scale per activation row (= per token for
+                    LM stacks). Required for prefill/decode parity: a
+                    token's int8 codes must not depend on which other
+                    tokens share the batch (see docs/quantization.md).
     """
     backend: str = "bf16"
     multiplier: str = "proposed"       # compressor design for approx paths
     structure: str = "proposed"        # multiplier structure
     per_channel: bool = True           # weight scales per output channel
+    act_scale: str = "per_tensor"      # 'per_tensor' | 'per_token'
     stochastic_round: bool = False
     fuse_epilogue: bool = True
 
@@ -52,6 +61,16 @@ class QuantConfig:
     @property
     def is_approx(self) -> bool:
         return self.backend.startswith("approx")
+
+
+def for_lm(backend: str, multiplier: str = "proposed") -> QuantConfig:
+    """QuantConfig for transformer inference: per-token activation scales
+    so prefill and decode produce identical int8 codes for the same token
+    (the LM parity contract — tests/test_lm_backends.py)."""
+    if backend == "bf16":
+        return BF16
+    return QuantConfig(backend=backend, multiplier=multiplier,
+                       act_scale="per_token")
 
 
 BF16 = QuantConfig()

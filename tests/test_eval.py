@@ -168,6 +168,49 @@ def test_smoke_task_suites_cover_every_backend(smoke_run):
             assert isinstance(r[key], float) and math.isfinite(r[key])
 
 
+def test_smoke_lm_suite_covers_every_backend(smoke_run):
+    labels = {label for label, _, _ in sweep_points(variants=True)}
+    rows = artifacts.load(smoke_run / "lm.json")["tables"]["lm"]
+    assert {r["backend"] for r in rows} == labels
+    ref = [r for r in rows if r["backend"] == "bf16"][0]
+    assert ref["d_ppl"] == 0.0 and ref["logit_nmed"] == 0.0
+    for r in rows:
+        assert isinstance(r["ppl"], float) and math.isfinite(r["ppl"])
+        assert r["logit_nmed"] >= 0.0
+
+
+def test_resolve_suites_comma_lists():
+    from repro.eval.runners import SUITE_ORDER, resolve_suites
+    assert resolve_suites("all") == SUITE_ORDER
+    assert resolve_suites("metrics,hw") == ("metrics", "hw")
+    assert resolve_suites(" hw , metrics ") == ("hw", "metrics")
+    with pytest.raises(KeyError):
+        resolve_suites("metrics,nope")
+    with pytest.raises(KeyError):
+        resolve_suites(",")
+
+
+def test_run_rejects_unknown_suite(tmp_path):
+    assert main(["run", "--suite", "nope", "--out", str(tmp_path)]) == 2
+
+
+def test_run_exits_nonzero_when_a_suite_raises(tmp_path, monkeypatch):
+    # satellite fix: a raising runner must fail the CLI loudly, while the
+    # remaining suites still run and write artifacts
+    from repro.eval import runners
+
+    def boom(smoke=False, seed=0):
+        raise RuntimeError("injected suite failure")
+
+    monkeypatch.setitem(runners.SUITES, "boom",
+                        runners.Suite("boom", boom, {}))
+    monkeypatch.setattr(runners, "SUITE_ORDER", ("boom", "metrics"))
+    assert main(["run", "--suite", "all", "--smoke",
+                 "--out", str(tmp_path)]) == 1
+    assert (tmp_path / "metrics.json").exists()
+    assert not (tmp_path / "boom.json").exists()
+
+
 def test_deterministic_suites_match_committed_tables(smoke_run):
     # metrics/hw involve no training: their rendered tables must be
     # byte-identical to the committed artifacts on any machine

@@ -1,0 +1,173 @@
+"""Decode-vs-prefill parity of the LM stack under every quant backend.
+
+The LM contract (docs/quantization.md): with per-token activation scales
+(`QuantConfig(act_scale='per_token')`), a token's int8 codes — and hence
+every backend's int32 accumulators — depend only on that token's activation
+row, never on which other tokens share the batch. Consequences tested here:
+
+  (a) layer level — `quantized_matmul` on a row slice is bit-identical to
+      the same rows inside a larger batch, for every registered backend;
+  (b) model level — prefill(T) and prefill(T-1)+decode produce identical
+      last-position logits on a tiny smollm-family stack (CPU determinism:
+      the float attention/norm ops see identical per-row inputs);
+  (c) the LM head dispatches through the registry: quantized configs
+      change the logits, and approx-backend logits match the approx_lut
+      emulation family exactly where the oracle chain says they must;
+  (d) the fused Pallas epilogue composes with per-token scales (fused ==
+      unfused within float tolerance, same int accumulators).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import transformer_lm as TLM
+from repro.quant import matmul as QM
+from repro.quant.quantize import QuantConfig, for_lm
+
+RNG = np.random.default_rng(23)
+BACKENDS = list(QM.list_backends())
+
+
+def _rand_f(*shape, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape).astype(np.float32) * scale)
+
+
+# -- (a) per-token row independence at the matmul level ---------------------
+
+@pytest.mark.parametrize("name", BACKENDS)
+def test_per_token_rows_independent_of_batch(name):
+    cfg = QuantConfig(backend=name, act_scale="per_token")
+    x = _rand_f(9, 24)
+    w = _rand_f(24, 13, scale=0.1)
+    full = np.asarray(QM.quantized_matmul(x, w, cfg))
+    for sl in (slice(0, 1), slice(4, 6), slice(8, 9)):
+        part = np.asarray(QM.quantized_matmul(x[sl], w, cfg))
+        np.testing.assert_array_equal(full[sl], part,
+                                      err_msg=f"{name} rows {sl}")
+
+
+def test_per_tensor_rows_are_batch_dependent():
+    # the contrast that motivates per_token: per-tensor scales couple rows
+    cfg = QuantConfig(backend="int8_exact")
+    x = _rand_f(8, 16)
+    x = x.at[0, 0].set(50.0)       # one outlier rescales every other row
+    w = _rand_f(16, 4, scale=0.1)
+    full = np.asarray(QM.quantized_matmul(x, w, cfg))
+    part = np.asarray(QM.quantized_matmul(x[4:5], w, cfg))
+    assert not np.array_equal(full[4:5], part)
+
+
+@pytest.mark.parametrize("name", BACKENDS)
+def test_per_token_fused_matches_unfused(name):
+    cfg = QuantConfig(backend=name, act_scale="per_token")
+    x = _rand_f(2, 5, 33)
+    w = _rand_f(33, 17, scale=0.1)
+    b = _rand_f(17, scale=0.05)
+    yf = QM.quantized_matmul(x, w, cfg, bias=b, activation="relu")
+    yu = QM.quantized_matmul(
+        x, w, dataclasses.replace(cfg, fuse_epilogue=False), bias=b,
+        activation="relu")
+    np.testing.assert_allclose(np.asarray(yf), np.asarray(yu),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_unknown_act_scale_raises():
+    cfg = QuantConfig(backend="int8_exact", act_scale="per_block")
+    with pytest.raises(ValueError, match="act_scale"):
+        QM.quantized_matmul(_rand_f(4, 8), _rand_f(8, 3), cfg)
+
+
+# -- (b)+(c) model-level prefill/decode parity + quantized LM head ----------
+
+@pytest.fixture(scope="module")
+def tiny_lm():
+    cfg = registry.reduced("smollm-135m", n_layers=2, d_model=64, n_heads=4,
+                           n_kv_heads=2, d_ff=128, vocab=128, vocab_pad=128,
+                           head_dim=16)
+    params = TLM.init(cfg, jax.random.PRNGKey(0))
+    toks = jnp.asarray(np.random.default_rng(3).integers(
+        0, cfg.vocab, (2, 8)).astype(np.int32))
+    return cfg, params, toks
+
+
+def _last_logits_prefill(cfg, params, toks):
+    caches = TLM.init_cache(cfg, toks.shape[0], 16, jnp.float32)
+    logits, _ = TLM.prefill(params, toks, cfg, caches)
+    return np.asarray(logits)
+
+
+def _last_logits_decode(cfg, params, toks):
+    caches = TLM.init_cache(cfg, toks.shape[0], 16, jnp.float32)
+    _, caches = TLM.prefill(params, toks[:, :-1], cfg, caches)
+    pos = jnp.int32(toks.shape[1] - 1)
+    logits, _ = TLM.decode_step(params, toks[:, -1:], pos, cfg, caches)
+    return np.asarray(logits)
+
+
+@pytest.mark.parametrize("backend", ["bf16"] + BACKENDS)
+def test_prefill_decode_logit_parity(tiny_lm, backend):
+    cfg0, params, toks = tiny_lm
+    cfg = dataclasses.replace(cfg0, quant=for_lm(backend))
+    a = _last_logits_prefill(cfg, params, toks)
+    b = _last_logits_decode(cfg, params, toks)
+    assert np.all(np.isfinite(a))
+    np.testing.assert_array_equal(
+        a, b, err_msg=f"{backend}: decode diverged from prefill")
+
+
+def test_per_tensor_scales_break_decode_parity(tiny_lm):
+    # the negative control: with per-tensor activation scales the decode
+    # step quantizes against a different dynamic range than prefill did,
+    # so the accumulators (and logits) drift — exactly why the LM path
+    # pins act_scale='per_token'.
+    cfg0, params, toks = tiny_lm
+    cfg = dataclasses.replace(
+        cfg0, quant=QuantConfig(backend="int8_exact"))
+    a = _last_logits_prefill(cfg, params, toks)
+    b = _last_logits_decode(cfg, params, toks)
+    assert not np.array_equal(a, b)
+
+
+def test_lm_head_routes_through_registry(tiny_lm):
+    cfg0, params, toks = tiny_lm
+    h = _rand_f(2, 3, cfg0.d_model, scale=0.5)
+    lg_f = np.asarray(TLM.lm_logits(params, h, cfg0))
+    cfg_q = dataclasses.replace(cfg0, quant=for_lm("int8_exact"))
+    lg_q = np.asarray(TLM.lm_logits(params, h, cfg_q))
+    # quantized head actually quantizes ...
+    assert not np.array_equal(lg_f, lg_q)
+    np.testing.assert_allclose(lg_f, lg_q, rtol=0.2, atol=0.5)
+    # ... and under QAT the head mirrors dense: float einsum over
+    # fake-quantized weights — quantization noise present, integer
+    # backends not engaged (identical for every backend)
+    lg_qat = np.asarray(TLM.lm_logits(params, h, cfg_q, qat=True))
+    assert not np.array_equal(lg_f, lg_qat)
+    np.testing.assert_allclose(lg_f, lg_qat, rtol=0.2, atol=0.5)
+    cfg_q2 = dataclasses.replace(cfg0, quant=for_lm("approx_lut"))
+    lg_qat2 = np.asarray(TLM.lm_logits(params, h, cfg_q2, qat=True))
+    np.testing.assert_array_equal(lg_qat, lg_qat2)
+
+
+def test_lm_head_oracle_family_bit_parity(tiny_lm):
+    # approx_deficit is registered oracle-bit-identical to approx_lut;
+    # through the whole LM-head projection (quantize -> backend -> dequant)
+    # the logits must therefore agree bitwise as well.
+    cfg0, params, _ = tiny_lm
+    h = _rand_f(1, 4, cfg0.d_model, scale=0.5)
+    out = {}
+    for backend in ("approx_lut", "approx_deficit"):
+        cfg = dataclasses.replace(cfg0, quant=for_lm(backend))
+        out[backend] = np.asarray(TLM.lm_logits(params, h, cfg))
+    np.testing.assert_array_equal(out["approx_lut"], out["approx_deficit"])
+
+
+def test_forward_loss_quantized_backend_is_finite(tiny_lm):
+    cfg0, params, toks = tiny_lm
+    cfg = dataclasses.replace(cfg0, quant=for_lm("approx_stage1_fused"))
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    loss = TLM.forward_loss(params, batch, cfg, training=False)
+    assert np.isfinite(float(loss))
