@@ -20,7 +20,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table2,table3,table4,table5,"
-                         "fig7,kernels,lm")
+                         "fig7,kernels,lm,serve")
     args = ap.parse_args(sys.argv[1:])
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
@@ -28,6 +28,7 @@ def main() -> None:
     from benchmarks import tables as T
     from benchmarks import kernel_perf as K
     from benchmarks import lm_perf as LMP
+    from benchmarks import serve_perf as SP
 
     results = {}
     csv = []
@@ -55,6 +56,11 @@ def main() -> None:
             if "bf16" in dec and "approx_stage1_fused" in dec:
                 derived = (f"stage1_fused_decode_vs_bf16="
                            f"{dec['approx_stage1_fused'] / dec['bf16']:.2f}x")
+        elif name == "serve":
+            loaded = SP.loaded_points(rows)
+            if loaded:
+                worst = min(r["speedup_vs_drain"] for r in loaded)
+                derived = f"continuous_vs_drain_worst={worst:.2f}x"
         csv.append(f"{name},{dt:.0f},{derived}")
 
     bench("table1", T.table1_compressor)
@@ -65,14 +71,19 @@ def main() -> None:
     bench("fig7", lambda: T.fig7_denoising(quick=quick))
     bench("kernels", lambda: K.run(quick=quick))
     bench("lm", lambda: LMP.run(quick=quick))
+    bench("serve", lambda: SP.run(quick=quick))
 
     OUT.mkdir(exist_ok=True)
+    # versioned standalone artifacts: the serving-throughput trajectories
+    # are diffed across PRs like the eval tables (schema v1)
     if "lm" in results:
-        # versioned standalone artifact: the serving-throughput trajectory
-        # is diffed across PRs like the eval tables (schema v1)
         from repro.eval import artifacts
         artifacts.save(OUT / "bench_lm.json",
                        LMP.artifact(results["lm"], quick))
+    if "serve" in results:
+        from repro.eval import artifacts
+        artifacts.save(OUT / "bench_serve.json",
+                       SP.artifact(results["serve"], quick))
     (OUT / "bench_results.json").write_text(json.dumps(results, indent=1,
                                                        default=float))
     print("\nname,us_per_call,derived")

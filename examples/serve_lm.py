@@ -1,13 +1,17 @@
-"""Serve a small LM with batched requests — the end-to-end inference driver.
+"""Serve a small LM with continuous batching — the end-to-end driver.
 
-The paper's technique plugs in as the quant backend of every projection
-(QKV, attention output, MLP, LM head), with per-token activation scales so
-prefill and decode stay bit-identical (docs/quantization.md).
+Thin wrapper over `repro.serve.Engine`: a mixed-length request queue is
+served through the fixed-slot KV pool, with the paper's technique plugged
+in as the quant backend of every projection (QKV, attention output, MLP,
+LM head) via per-token activation scales (docs/quantization.md). Freed
+slots are refilled mid-decode; `--policy drain` switches to the
+batch-synchronous baseline for comparison (docs/serving.md).
+
 Run:  PYTHONPATH=src python examples/serve_lm.py [--backend approx_lut]
+      PYTHONPATH=src python examples/serve_lm.py --sampling top_k --top-k 8
 """
 import argparse
 import dataclasses
-import time
 
 import jax
 import numpy as np
@@ -16,25 +20,49 @@ from repro.configs import registry
 from repro.models import transformer_lm as TLM
 from repro.quant.matmul import list_backends
 from repro.quant.quantize import for_lm
-from repro.train.serve_loop import Server, Request
+from repro.serve import Engine, SamplingConfig, ServeRequest
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--backend", default="bf16",
                 choices=["bf16", *list_backends()])
 ap.add_argument("--requests", type=int, default=8)
 ap.add_argument("--max-new", type=int, default=12)
+ap.add_argument("--slots", type=int, default=4)
+ap.add_argument("--policy", default="continuous",
+                choices=["continuous", "drain"])
+ap.add_argument("--sampling", default="greedy",
+                choices=["greedy", "temperature", "top_k"])
+ap.add_argument("--temperature", type=float, default=0.8)
+ap.add_argument("--top-k", type=int, default=8)
+ap.add_argument("--seed", type=int, default=0)
+ap.add_argument("--stream", action="store_true",
+                help="print tokens as they are emitted")
 args = ap.parse_args()
 
 cfg = registry.reduced("smollm-135m", n_layers=4, d_model=128, d_ff=256)
 cfg = dataclasses.replace(cfg, quant=for_lm(args.backend))
 params = TLM.init(cfg, jax.random.PRNGKey(0))
-srv = Server(cfg, params, batch_slots=4, max_len=64)
-rng = np.random.default_rng(0)
+scfg = SamplingConfig(kind=args.sampling, temperature=args.temperature,
+                      top_k=args.top_k, seed=args.seed)
+stream = ((lambda rid, tok: print(f"  rid {rid} -> {tok}"))
+          if args.stream else None)
+eng = Engine(cfg, params, slots=args.slots, max_len=64,
+             admission=args.policy, stream=stream)
+rng = np.random.default_rng(args.seed)
 for rid in range(args.requests):
-    srv.submit(Request(rid=rid,
-                       prompt=rng.integers(0, cfg.vocab, 8).astype(np.int32),
-                       max_new=args.max_new))
-stats = srv.run()
-print(f"backend={args.backend} served {stats['requests']} requests in "
-      f"{stats['batches']} batches: {stats['new_tokens']} tokens, "
-      f"{stats['tok_per_s']:.1f} tok/s")
+    plen = int(rng.integers(4, 17))          # mixed-length workload
+    eng.submit(ServeRequest(
+        rid=rid, prompt=rng.integers(0, cfg.vocab, plen).astype(np.int32),
+        max_new=int(rng.integers(min(4, args.max_new), args.max_new + 1)),
+        sampling=scfg))
+stats = eng.run()
+for r in sorted(eng.completed, key=lambda r: r.rid):
+    ttft = (f"{r.timing.ttft_s * 1e3:7.1f} ms"
+            if r.timing.ttft_s is not None else "      —")
+    print(f"rid {r.rid}: {len(r.output):2d} tokens ({r.finish_reason}), "
+          f"ttft {ttft}")
+print(f"backend={args.backend} policy={args.policy}: "
+      f"{stats['requests']} requests in {stats['decode_steps']} decode "
+      f"steps / {stats['waves']} admission waves, {stats['new_tokens']} "
+      f"tokens, {stats['tok_per_s']:.1f} tok/s, "
+      f"occupancy {stats['occupancy']:.2f}")

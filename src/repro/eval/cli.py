@@ -30,8 +30,8 @@ def _repo_root() -> Path:
 REPO_ROOT = _repo_root()
 # help text only — validation happens in runners.resolve_suites, which is
 # imported lazily so the argparse layer stays free of jax
-SUITE_HELP = ("'all', one of metrics/hw/denoise/mnist/lm, or a comma list "
-              "(e.g. 'metrics,hw')")
+SUITE_HELP = ("'all', one of metrics/hw/denoise/mnist/lm/serve, or a comma "
+              "list (e.g. 'metrics,hw')")
 DEFAULT_OUT = REPO_ROOT / "experiments" / "eval"
 # where example wrappers / ad-hoc runs write, so they never dirty the
 # committed artifacts that docs --check validates against

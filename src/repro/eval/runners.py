@@ -10,6 +10,8 @@ error metrics and hardware proxies from :mod:`repro.eval.profiles`:
   mnist     paper §5.1 / Table 5 — LeNet-5 accuracy per backend
   lm        beyond paper — decoder-LM perplexity + logit NMED per backend
             (repro.eval.lm; the transformer stack through the registry)
+  serve     beyond paper — continuous-batching output parity per backend
+            (repro.eval.serve; mixed-length workload through repro.serve)
 
 ``smoke`` swaps the paper-scale budgets for minute-scale ones (tiny model,
 few steps, small eval sets) without changing the sweep structure — every
@@ -140,6 +142,11 @@ def run_lm(smoke: bool = False, seed: int = 0) -> Dict:
     return LM.run(smoke=smoke, seed=seed)
 
 
+def run_serve(smoke: bool = False, seed: int = 0) -> Dict:
+    from repro.eval import serve as SERVE
+    return SERVE.run(smoke=smoke, seed=seed)
+
+
 # ---------------------------------------------------------------------------
 # Suite registry + markdown rendering
 # ---------------------------------------------------------------------------
@@ -251,9 +258,31 @@ SUITES: Dict[str, Suite] = {
             "Logit NMED is mean |Δlogit| / max |logit_bf16| vs the bf16 "
             "reference.")},
         doc="decoder-LM perplexity/logit-NMED backend sweep"),
+    "serve": Suite(
+        "serve", run_serve,
+        {"serve": TableSpec(
+            "Serving — continuous-batching output parity per backend "
+            "(beyond paper)",
+            (("backend", "backend", None), ("requests", "requests", None),
+             ("new_tokens", "new tokens", None),
+             ("solo_match", "solo == batched", None),
+             ("match_bf16", "tokens == bf16 %", ".2f"),
+             ("prefix_bf16", "shared prefix (tok)", ".2f")),
+            "Mixed-length workload (more requests than slots; the last "
+            "request is admitted mid-decode into a reused slot) served by "
+            "the continuous-batching engine (repro.serve) under every "
+            "backend with per-token activation scales. `solo == batched` "
+            "is the engine's bitwise batching-invariance contract "
+            "(exhaustive per-backend proof in tests/test_serve.py); the "
+            "bf16 columns measure where approximate accumulators first "
+            "flip a greedy argmax. Params are random-init — this scores "
+            "the serving path, not task quality (see suite `lm`). "
+            "Throughput lives in benchmarks/serve_perf.py -> "
+            "experiments/bench_serve.json.")},
+        doc="continuous-batching serving parity backend sweep"),
 }
 
-SUITE_ORDER = ("metrics", "hw", "denoise", "mnist", "lm")
+SUITE_ORDER = ("metrics", "hw", "denoise", "mnist", "lm", "serve")
 
 
 def resolve_suites(name: str) -> Sequence[str]:

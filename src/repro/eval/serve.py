@@ -1,0 +1,122 @@
+"""Serve suite — backend-vs-bf16 output parity under mixed continuous
+batching (repro.serve).
+
+The LM suite scores teacher-forced quality; this suite scores the *serving
+path*: every registered backend drives the continuous-batching engine on a
+mixed-length workload (more requests than slots, so the tail is admitted
+mid-decode into reused slots) and is compared against the bf16 reference
+serve of the identical workload.
+
+Reported per backend:
+
+  solo_match   True iff the probe request (the one admitted mid-decode into
+               a reused slot) decodes bitwise-identical tokens when served
+               alone — the engine's batching-invariance contract, proved
+               exhaustively per backend in tests/test_serve.py and spot-
+               checked here inside the artifact trail
+  match_bf16   % of decoded tokens equal to the bf16 serve (greedy)
+  prefix_bf16  mean shared-prefix length with the bf16 serve — how many
+               tokens survive before approximate accumulators flip an
+               argmax
+
+Params are randomly initialized: the suite measures divergence onset on the
+serving path, not task quality (that is the `lm` suite's job). Wall-clock
+throughput lives in benchmarks/serve_perf.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+
+def workload(vocab: int, smoke: bool, seed: int):
+    """Mixed prompt lengths and budgets; more requests than slots so the
+    last request is admitted mid-decode. Returns (requests, slots,
+    max_len) with requests = [(rid, prompt, max_new), ...]."""
+    import numpy as np
+    rng = np.random.default_rng(seed + 11)
+    if smoke:
+        n_req, slots, max_len = 4, 3, 32
+        lens, news = rng.integers(2, 9, n_req), rng.integers(3, 7, n_req)
+    else:
+        n_req, slots, max_len = 8, 4, 96
+        lens, news = rng.integers(4, 25, n_req), rng.integers(8, 17, n_req)
+    reqs = [(rid, rng.integers(0, vocab, int(lens[rid])).astype(np.int32),
+             int(news[rid])) for rid in range(n_req)]
+    return reqs, slots, max_len
+
+
+def serve_outputs(cfg, params, reqs, slots: int,
+                  max_len: int) -> Dict[int, List[int]]:
+    """Serve `reqs` through a continuous engine -> {rid: tokens}."""
+    from repro.serve import Engine, ServeRequest
+    eng = Engine(cfg, params, slots=slots, max_len=max_len)
+    for rid, prompt, max_new in reqs:
+        eng.submit(ServeRequest(rid=rid, prompt=prompt, max_new=max_new))
+    eng.run()
+    return {r.rid: list(r.output) for r in eng.completed}
+
+
+def _parity(outs: Dict[int, List[int]],
+            ref: Dict[int, List[int]]) -> Tuple[float, float]:
+    """(token match % vs ref, mean shared-prefix length)."""
+    total = match = 0
+    prefixes = []
+    for rid, toks in outs.items():
+        rtoks = ref[rid]
+        total += len(rtoks)
+        match += sum(a == b for a, b in zip(toks, rtoks))
+        p = 0
+        for a, b in zip(toks, rtoks):
+            if a != b:
+                break
+            p += 1
+        prefixes.append(p)
+    return 100.0 * match / max(total, 1), sum(prefixes) / len(prefixes)
+
+
+def run(smoke: bool = False, seed: int = 0) -> Dict:
+    """The `serve` suite runner (registered in repro.eval.runners)."""
+    import jax
+
+    from repro.eval import artifacts
+    from repro.eval import lm as LM
+    from repro.eval.runners import _base_config, sweep_points
+    from repro.models import transformer_lm as TLM
+    from repro.quant.quantize import for_lm
+    from repro.serve import Engine, ServeRequest
+
+    cfg0 = LM.arch(smoke)
+    params = TLM.init(cfg0, jax.random.PRNGKey(seed))
+    reqs, slots, max_len = workload(cfg0.vocab, smoke, seed)
+    probe = reqs[-1]       # admitted mid-decode (n_req > slots)
+
+    rows: List[Dict] = []
+    ref = None
+    for label, backend, mult in sweep_points(variants=True):
+        cfg = dataclasses.replace(cfg0, quant=for_lm(backend, mult))
+        outs = serve_outputs(cfg, params, reqs, slots, max_len)
+        if label == "bf16":
+            ref = outs
+        # probe served alone on the same pool shape (bitwise contract)
+        solo_eng = Engine(cfg, params, slots=slots, max_len=max_len)
+        solo_eng.submit(ServeRequest(rid=probe[0], prompt=probe[1],
+                                     max_new=probe[2]))
+        solo_eng.run()
+        solo = list(solo_eng.completed[0].output)
+        match_pct, prefix = _parity(outs, ref)
+        rows.append({
+            "backend": label,
+            "requests": len(reqs),
+            "new_tokens": sum(len(t) for t in outs.values()),
+            "solo_match": bool(solo == outs[probe[0]]),
+            "match_bf16": round(match_pct, 2),
+            "prefix_bf16": round(prefix, 2),
+        })
+
+    config = {**_base_config(smoke, seed), "arch": cfg0.name,
+              "n_layers": cfg0.n_layers, "d_model": cfg0.d_model,
+              "vocab": cfg0.vocab, "slots": slots, "max_len": max_len,
+              "n_req": len(reqs), "act_scale": "per_token",
+              "params": "random-init (parity suite)"}
+    return artifacts.make_artifact("serve", {"serve": rows}, config)

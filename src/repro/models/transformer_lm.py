@@ -388,16 +388,32 @@ def forward_loss(params, batch, cfg: ArchConfig,
 
 
 def prefill(params, tokens, cfg: ArchConfig, caches,
-            rules: ShardingRules = DEFAULT_RULES, enc=None):
+            rules: ShardingRules = DEFAULT_RULES, enc=None, lengths=None):
+    """Batched prefill -> (next-token logits (B, 1, V), caches).
+
+    lengths: optional (B,) int32 true prompt lengths for a right-padded
+    batch — logits are gathered at each row's last *real* token instead of
+    the shared last column (mixed-length serving; the padded tail's KV is
+    masked out of later decode steps by absolute position). Without
+    `lengths` the batch is assumed unpadded.
+    """
     x = embed_tokens(params, tokens, cfg)
     h, caches, _ = backbone(params, x, cfg, rules, caches=caches, pos=None,
                             enc=enc)
-    return lm_logits(params, h[:, -1:], cfg), caches
+    if lengths is not None:
+        idx = jnp.asarray(lengths, jnp.int32) - 1
+        h = h[jnp.arange(h.shape[0]), idx][:, None]      # (B, 1, D)
+    else:
+        h = h[:, -1:]
+    return lm_logits(params, h, cfg), caches
 
 
 def decode_step(params, token, pos, cfg: ArchConfig, caches,
                 rules: ShardingRules = DEFAULT_RULES, enc=None):
-    """token: (B,1) ids or (B,1,D) stub embeds; pos: int32 scalar array."""
+    """token: (B,1) ids or (B,1,D) stub embeds; pos: int32 scalar array for
+    uniform batch-synchronous decode, or a (B,) vector giving each cache
+    row its own absolute position (per-slot continuous batching —
+    repro.serve drives this with the slot pool's position vector)."""
     x = embed_tokens(params, token, cfg)
     h, caches, _ = backbone(params, x, cfg, rules, caches=caches, pos=pos,
                             enc=enc)

@@ -64,6 +64,23 @@ def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
     return out.astype(x.dtype)
 
 
+def q_positions(pos: Optional[jax.Array], b: int, s: int) -> jax.Array:
+    """Absolute positions of the current queries, one row per batch slot.
+
+    pos None   -> prefill from 0 (every row 0..s-1)
+    pos scalar -> uniform decode offset (the batch-synchronous case)
+    pos (B,)   -> per-slot offsets (continuous batching: each slot of the
+                  serving pool decodes at its own depth)
+    Returns (B, s) int32.
+    """
+    base = jnp.arange(s, dtype=jnp.int32)[None, :]
+    if pos is None:
+        return jnp.broadcast_to(base, (b, s))
+    pos = jnp.asarray(pos, jnp.int32)
+    off = pos[None] if pos.ndim == 0 else pos
+    return jnp.broadcast_to(off[:, None] + base, (b, s))
+
+
 # ---------------------------------------------------------------------------
 # Descriptors
 # ---------------------------------------------------------------------------
@@ -123,8 +140,11 @@ def _sdpa(q, k, v, q_pos, k_pos, window, rules: ShardingRules,
     neither an (Sq, Sk) score tensor nor an (Sq, Sk) mask is materialized —
     chunk masks are rebuilt from absolute positions inside the scan body.
 
-    q: (B,Sq,H,D) k/v: (B,Sk,Hkv,D[v]); q_pos (B?,Sq), k_pos (B?,Sk) with
-    -1 marking invalid slots. Exact up to fp associativity; fp32 accum.
+    q: (B,Sq,H,D) k/v: (B,Sk,Hkv,D[v]); q_pos (Sq,)/(B?,Sq) and k_pos
+    (Sk,)/(B?,Sk) with -1 marking invalid slots — a full (B, S) position
+    matrix means every batch row masks against its own absolute positions
+    (per-slot continuous batching). Exact up to fp associativity; fp32
+    accum.
     """
     b, sq, h, d = q.shape
     hkv = k.shape[2]
@@ -133,19 +153,18 @@ def _sdpa(q, k, v, q_pos, k_pos, window, rules: ShardingRules,
     sk = k.shape[1]
     c = min(kv_chunk, sk)
     pad = (-sk) % c
-    k_pos = jnp.broadcast_to(k_pos, (1, sk)) if k_pos.ndim == 1 else k_pos
-    k_pos = k_pos[0]                                    # (Sk,) shared
+    k_pos = jnp.broadcast_to(jnp.atleast_2d(k_pos), (b, sk))
     if pad:
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        k_pos = jnp.pad(k_pos, (0, pad), constant_values=-1)
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
     n_chunks = (sk + pad) // c
 
     qh = q.reshape(b, sq, hkv, g, d).astype(jnp.float32) * (d ** -0.5)
     kc = k.reshape(b, n_chunks, c, hkv, d).transpose(1, 0, 2, 3, 4)
     vc = v.reshape(b, n_chunks, c, hkv, dv).transpose(1, 0, 2, 3, 4)
-    kpc = k_pos.reshape(n_chunks, c)
-    qp = q_pos[0] if q_pos.ndim == 2 else q_pos         # (Sq,)
+    kpc = k_pos.reshape(b, n_chunks, c).transpose(1, 0, 2)   # (n, B, c)
+    qp = jnp.broadcast_to(jnp.atleast_2d(q_pos), (b, sq))    # (B, Sq)
 
     msz = mesh_axis_size("model")
 
@@ -168,15 +187,15 @@ def _sdpa(q, k, v, q_pos, k_pos, window, rules: ShardingRules,
 
     def body(carry, xs):
         m, l, acc = carry
-        kj, vj, kpj = xs                                # (B,c,Hkv,D), (c,)
-        dist = qp[:, None] - kpj[None, :]               # (Sq, c)
-        mj = kpj[None, :] >= 0
+        kj, vj, kpj = xs                                # (B,c,Hkv,D), (B,c)
+        dist = qp[:, :, None] - kpj[:, None, :]         # (B, Sq, c)
+        mj = kpj[:, None, :] >= 0
         if causal:
             mj = mj & (dist >= 0)
             if window:
                 mj = mj & (dist < window)
         s = jnp.einsum("bqhgd,bkhd->bhgqk", qh, kj.astype(jnp.float32))
-        s = jnp.where(mj[None, None, None], s, NEG)
+        s = jnp.where(mj[:, None, None], s, NEG)
         m_new = jnp.maximum(m, s.max(axis=-1))
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
@@ -201,7 +220,11 @@ def apply(params, x, cfg: AttnConfig, rules: ShardingRules,
     Modes:
       train/prefill : x (B,S,D), pos None -> positions 0..S-1; cache written
                       if provided.
-      decode        : x (B,1,D) with integer `pos` (scalar array).
+      decode        : x (B,1,D) with integer `pos` — a scalar for uniform
+                      batch-synchronous decode, or a (B,) vector for
+                      per-slot positions (continuous batching: each row of
+                      the cache pool is at its own depth; writes and masks
+                      are computed per row).
       cross         : enc (B,Se,De) provides K/V; no cache, no causal mask.
     """
     if cfg.is_mla:
@@ -223,8 +246,7 @@ def apply(params, x, cfg: AttnConfig, rules: ShardingRules,
                     causal=False, p_bf16=cfg.p_bf16)
         return L.dense({"w": params["wo"]}, out, quant, qat), cache
 
-    q_pos = (jnp.arange(s)[None, :] if pos is None
-             else pos[None, None] + jnp.arange(s)[None, :])
+    q_pos = q_positions(pos, b, s)                   # (B, s) absolute
     q = rope(q, q_pos, cfg.rope_theta)
     k = rope(k, q_pos, cfg.rope_theta)
 
@@ -234,24 +256,21 @@ def apply(params, x, cfg: AttnConfig, rules: ShardingRules,
         return L.dense({"w": params["wo"]}, out, quant, qat), None
 
     slots = cache["k"].shape[1]
+    bidx = jnp.arange(b)[:, None]
+    slot_ids = jnp.arange(slots)[None, :]
     if cfg.window and slots == cfg.window:
-        # ring buffer: slot = absolute position mod W
-        write_idx = (q_pos[0] % slots)
-        ck = cache["k"].at[:, write_idx].set(k.astype(cache["k"].dtype))
-        cv = cache["v"].at[:, write_idx].set(v.astype(cache["v"].dtype))
-        last = q_pos[0, -1]
-        slot_ids = jnp.arange(slots)
+        # ring buffer: slot = absolute position mod W, per batch row
+        write_idx = q_pos % slots                    # (B, s)
+        ck = cache["k"].at[bidx, write_idx].set(k.astype(cache["k"].dtype))
+        cv = cache["v"].at[bidx, write_idx].set(v.astype(cache["v"].dtype))
+        last = q_pos[:, -1:]                         # (B, 1)
         k_abs = last - ((last - slot_ids) % slots)   # abs pos held per slot
-        k_pos = jnp.where(k_abs >= 0, k_abs, -1)[None, :]
+        k_pos = jnp.where(k_abs >= 0, k_abs, -1)     # (B, slots)
     else:
-        start = q_pos[0, 0]
-        ck = jax.lax.dynamic_update_slice(
-            cache["k"], k.astype(cache["k"].dtype), (0, start, 0, 0))
-        cv = jax.lax.dynamic_update_slice(
-            cache["v"], v.astype(cache["v"].dtype), (0, start, 0, 0))
-        written = q_pos[0, -1] + 1
-        k_pos = jnp.where(jnp.arange(slots) < written, jnp.arange(slots),
-                          -1)[None, :]
+        ck = cache["k"].at[bidx, q_pos].set(k.astype(cache["k"].dtype))
+        cv = cache["v"].at[bidx, q_pos].set(v.astype(cache["v"].dtype))
+        written = q_pos[:, -1:] + 1                  # (B, 1)
+        k_pos = jnp.where(slot_ids < written, slot_ids, -1)
     out = _sdpa(q, ck, cv, q_pos, k_pos, cfg.window, rules,
                 p_bf16=cfg.p_bf16)
     return (L.dense({"w": params["wo"]}, out, quant, qat),
@@ -274,21 +293,20 @@ def _apply_mla(params, x, cfg: AttnConfig, rules, quant, *, cache, pos, qat):
     dkv = L.dense({"w": params["wdkv"]}, x, quant, qat)
     ckv_new, kpe_new = dkv[..., :cfg.kv_lora], dkv[..., cfg.kv_lora:]
 
-    q_pos = (jnp.arange(s)[None, :] if pos is None
-             else pos[None, None] + jnp.arange(s)[None, :])
+    q_pos = q_positions(pos, b, s)                   # (B, s) absolute
     q_pe = rope(q_pe, q_pos, cfg.rope_theta)
     kpe_new = rope(kpe_new[:, :, None, :], q_pos, cfg.rope_theta)[:, :, 0, :]
 
     if cache is not None:
-        start = q_pos[0, 0]
-        ckv = jax.lax.dynamic_update_slice(
-            cache["ckv"], ckv_new.astype(cache["ckv"].dtype), (0, start, 0))
-        kpe = jax.lax.dynamic_update_slice(
-            cache["kpe"], kpe_new.astype(cache["kpe"].dtype), (0, start, 0))
-        written = q_pos[0, -1] + 1
+        bidx = jnp.arange(b)[:, None]
+        ckv = cache["ckv"].at[bidx, q_pos].set(
+            ckv_new.astype(cache["ckv"].dtype))
+        kpe = cache["kpe"].at[bidx, q_pos].set(
+            kpe_new.astype(cache["kpe"].dtype))
+        written = q_pos[:, -1:] + 1                  # (B, 1)
         slots = ckv.shape[1]
-        k_pos = jnp.where(jnp.arange(slots) < written, jnp.arange(slots),
-                          -1)[None, :]
+        slot_ids = jnp.arange(slots)[None, :]
+        k_pos = jnp.where(slot_ids < written, slot_ids, -1)  # (B, slots)
         new_cache = {"ckv": ckv, "kpe": kpe}
     else:
         ckv, kpe = ckv_new, kpe_new
@@ -306,14 +324,15 @@ def _apply_mla(params, x, cfg: AttnConfig, rules, quant, *, cache, pos, qat):
     pad = (-sk) % c
     ckv_p = jnp.pad(ckv, ((0, 0), (0, pad), (0, 0))) if pad else ckv
     kpe_p = jnp.pad(kpe, ((0, 0), (0, pad), (0, 0))) if pad else kpe
-    kpos1 = (k_pos[0] if k_pos.ndim == 2 else k_pos)
-    kpos1 = jnp.pad(kpos1, (0, pad), constant_values=-1) if pad else kpos1
+    kpos1 = jnp.broadcast_to(jnp.atleast_2d(k_pos), (b, sk))
+    kpos1 = (jnp.pad(kpos1, ((0, 0), (0, pad)), constant_values=-1)
+             if pad else kpos1)
     n_chunks = (sk + pad) // c
     lora = ckv.shape[-1]
     ckv_c = ckv_p.reshape(b, n_chunks, c, lora).transpose(1, 0, 2, 3)
     kpe_c = kpe_p.reshape(b, n_chunks, c, dr).transpose(1, 0, 2, 3)
-    kpos_c = kpos1.reshape(n_chunks, c)
-    qp1 = q_pos[0] if q_pos.ndim == 2 else q_pos
+    kpos_c = kpos1.reshape(b, n_chunks, c).transpose(1, 0, 2)   # (n, B, c)
+    qp1 = jnp.broadcast_to(jnp.atleast_2d(q_pos), (b, s))       # (B, s)
 
     def _c3(t):   # (B, H, Sq[, lora]) carries
         return constrain(t, rules, "batch", "heads",
@@ -325,14 +344,14 @@ def _apply_mla(params, x, cfg: AttnConfig, rules, quant, *, cache, pos, qat):
 
     def body(carry, xs):
         m, l, acc = carry
-        ckv_j, kpe_j, kpj = xs
-        dist = qp1[:, None] - kpj[None, :]
-        mj = (kpj[None, :] >= 0) & (dist >= 0)          # (Sq, c)
+        ckv_j, kpe_j, kpj = xs                          # kpj (B, c)
+        dist = qp1[:, :, None] - kpj[:, None, :]        # (B, Sq, c)
+        mj = (kpj[:, None, :] >= 0) & (dist >= 0)
         sc = (jnp.einsum("bshl,bkl->bhsk", q_abs,
                          ckv_j.astype(jnp.float32))
               + jnp.einsum("bshr,bkr->bhsk", q_pe32,
                            kpe_j.astype(jnp.float32)))
-        sc = jnp.where(mj[None, None], sc, NEG)
+        sc = jnp.where(mj[:, None], sc, NEG)
         m_new = jnp.maximum(m, sc.max(axis=-1))
         p = jnp.exp(sc - m_new[..., None])
         corr = jnp.exp(m - m_new)

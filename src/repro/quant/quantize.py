@@ -66,7 +66,11 @@ class QuantConfig:
 def for_lm(backend: str, multiplier: str = "proposed") -> QuantConfig:
     """QuantConfig for transformer inference: per-token activation scales
     so prefill and decode produce identical int8 codes for the same token
-    (the LM parity contract — tests/test_lm_backends.py)."""
+    (the LM parity contract — tests/test_lm_backends.py). The serving
+    engine (repro.serve) builds its bitwise batching-invariance guarantee
+    on the same granularity: a token's accumulators never depend on which
+    other requests share the slot pool (tests/test_serve.py,
+    docs/serving.md)."""
     if backend == "bf16":
         return BF16
     return QuantConfig(backend=backend, multiplier=multiplier,

@@ -1,0 +1,17 @@
+"""Continuous-batching serving engine (see docs/serving.md).
+
+Public surface:
+  Engine, ServeRequest, FINISH_REASONS   — the serving loop (engine.py)
+  SamplingConfig, GREEDY                 — per-request sampling (sampling.py)
+  SlotScheduler                          — admission + slot free-list
+  padded_prefill_ok, compiled_fns        — engine plumbing reused by
+                                           benchmarks and the drain baseline
+"""
+from repro.serve.engine import (Engine, FINISH_REASONS, ServeRequest,
+                                compiled_fns, padded_prefill_ok)
+from repro.serve.sampling import GREEDY, SamplingConfig, sample_token
+from repro.serve.scheduler import SlotScheduler
+
+__all__ = ["Engine", "ServeRequest", "FINISH_REASONS", "SamplingConfig",
+           "GREEDY", "sample_token", "SlotScheduler", "compiled_fns",
+           "padded_prefill_ok"]

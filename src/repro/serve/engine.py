@@ -1,0 +1,232 @@
+"""Continuous-batching inference engine over the quantized backend registry.
+
+Fixed-slot design (static shapes — TPU/Pallas friendly):
+
+  * one KV-cache pool, allocated once: every cache leaf has a `slots` batch
+    axis and `max_len` positions; a request owns exactly one slot from
+    admission to finish
+  * decode advances ALL slots each step with a per-slot position vector
+    (`models/transformer_lm.decode_step` with `pos: (slots,)`); parked
+    (free) slots run token 0 at position 0 and their writes are overwritten
+    at the next admission
+  * admission (scheduler.SlotScheduler) happens between decode steps: a
+    freed slot is refilled immediately under the 'continuous' policy
+    instead of waiting for the wave to drain. The new request is prefilled
+    on a fresh batch=1 cache — length-aware, so the first token comes from
+    the prompt's true last position even when the prompt is padded to a
+    compile-friendly length bucket — and the WHOLE cache row is copied into
+    the slot, so no KV from the previous occupant can leak
+  * finish reasons are always explicit: 'eos' | 'max_new' | 'max_len'
+    (a request that hits the cache ceiling reports it — nothing is
+    silently truncated)
+
+The model executes through the quant backend registry via
+``quantize.for_lm``: per-token activation scales make every int8 code (and
+so every approximate-multiplier accumulator) a function of its own row
+only. Combined with position-masked attention over the fixed-size pool,
+that yields the engine's bitwise batching-invariance contract — a
+request's greedy tokens are identical served alone, in a full batch, or
+admitted mid-decode into a reused slot, for every registered backend
+(tests/test_serve.py; docs/serving.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer_lm as TLM
+from repro.models.transformer_lm import ArchConfig
+from repro.parallel.sharding import ShardingRules, DEFAULT_RULES
+from repro.serve.metrics import RequestTiming, summarize
+from repro.serve.sampling import GREEDY, SamplingConfig, sample_token
+from repro.serve.scheduler import SlotScheduler
+
+FINISH_REASONS = ("eos", "max_new", "max_len")
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    rid: int
+    prompt: np.ndarray                  # (len,) int32, len >= 1
+    max_new: int = 16
+    sampling: SamplingConfig = GREEDY
+    # filled by the engine:
+    output: List[int] = dataclasses.field(default_factory=list)
+    finish_reason: Optional[str] = None
+    timing: RequestTiming = dataclasses.field(default_factory=RequestTiming)
+
+
+@functools.lru_cache(maxsize=None)
+def compiled_fns(cfg: ArchConfig, rules: ShardingRules):
+    """Jitted prefill/decode shared across Engine instances (both frozen
+    dataclasses hash) — the drain baseline and the continuous engine in
+    benchmarks/serve_perf.py reuse one compilation, so the tok/s gap they
+    report is scheduling, not compile luck."""
+    prefill = jax.jit(lambda p, t, c, l: TLM.prefill(p, t, cfg, c, rules,
+                                                     lengths=l))
+    decode = jax.jit(lambda p, c, t, pos: TLM.decode_step(p, t, pos, cfg, c,
+                                                          rules))
+    return prefill, decode
+
+
+def padded_prefill_ok(cfg: ArchConfig) -> bool:
+    """Whether prompts may be padded to a length bucket at prefill.
+
+    Padding writes junk KV beyond the true length; that is safe only where
+    decode masks it out by absolute position and overwrites it in place —
+    i.e. position-indexed caches (global GQA, MLA). Recurrent SSM states
+    fold junk tokens in irreversibly, and windowed ring buffers alias junk
+    slots onto real positions, so those archs prefill at the exact prompt
+    length (one compile per distinct length — documented in
+    docs/serving.md)."""
+    return cfg.ssm == "" and cfg.local_ratio == 0 and cfg.local_window == 0
+
+
+class Engine:
+    """Single-host continuous-batching server for token LMs."""
+
+    def __init__(self, cfg: ArchConfig, params, *, slots: int = 4,
+                 max_len: int = 256, eos_id: Optional[int] = None,
+                 rules: ShardingRules = DEFAULT_RULES,
+                 admission: str = "continuous",
+                 stream: Optional[Callable[[int, int], None]] = None,
+                 cache_dtype=jnp.float32):
+        assert not cfg.embed_stub, "serving drives token models"
+        self.cfg, self.params, self.rules = cfg, params, rules
+        self.slots, self.max_len, self.eos_id = slots, max_len, eos_id
+        self.stream = stream
+        self.sched = SlotScheduler(slots, admission)
+        self.pool = TLM.init_cache(cfg, slots, max_len, cache_dtype)
+        self._cache_dtype = cache_dtype
+        self._slot_req: List[Optional[ServeRequest]] = [None] * slots
+        self._tok = np.zeros(slots, np.int32)     # next input token per slot
+        self._pos = np.zeros(slots, np.int32)     # its absolute position
+        self._prefill, self._decode = compiled_fns(cfg, rules)
+        self.completed: List[ServeRequest] = []
+        self.decode_steps = 0
+        self.busy_slot_steps = 0
+        self.prefills = 0
+
+    # ---- request intake --------------------------------------------------
+    def submit(self, req: ServeRequest) -> None:
+        req.prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+        if len(req.prompt) < 1:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        # reset engine-owned state so a caller may resubmit the same
+        # request object to another run (the historical Server allowed it)
+        req.output = []
+        req.finish_reason = None
+        req.timing = RequestTiming(submit_t=time.time())
+        self.sched.submit(req)
+
+    # ---- admission -------------------------------------------------------
+    def _bucket(self, plen: int) -> int:
+        """Compile-friendly prefill length: next power of two >= plen
+        (capped at max_len), or the exact length where padding is unsafe."""
+        if not padded_prefill_ok(self.cfg):
+            return plen
+        bucket = 8
+        while bucket < plen:
+            bucket *= 2
+        return min(bucket, self.max_len)
+
+    def _admit(self) -> None:
+        for slot, req in self.sched.admit():
+            plen = len(req.prompt)
+            if plen > self.max_len:
+                # rejected before prefill: no room for even the prompt
+                req.finish_reason = "max_len"
+                self._retire(slot)
+                continue
+            bucket = self._bucket(plen)
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, :plen] = req.prompt
+            fresh = TLM.init_cache(self.cfg, 1, self.max_len,
+                                   self._cache_dtype)
+            logits, fresh = self._prefill(
+                self.params, jnp.asarray(toks), fresh,
+                jnp.asarray([plen], jnp.int32))
+            self.prefills += 1
+            # full-row copy: the freed slot inherits nothing from its
+            # previous occupant (zero KV-cache leakage on reuse)
+            self.pool = jax.tree.map(
+                lambda pool, one: pool.at[:, slot].set(one[:, 0]),
+                self.pool, fresh)
+            self._slot_req[slot] = req
+            self._pos[slot] = plen
+            if req.max_new <= 0:
+                req.finish_reason = "max_new"
+            else:
+                first = sample_token(logits[0, 0], req.sampling, req.rid, 0)
+                self._emit(req, first)
+            if req.finish_reason:
+                self._retire(slot)
+            else:
+                self._tok[slot] = req.output[-1]
+
+    # ---- token emission / finish ----------------------------------------
+    def _emit(self, req: ServeRequest, tok: int) -> None:
+        req.output.append(tok)
+        if req.timing.first_token_t is None:
+            req.timing.first_token_t = time.time()
+        if self.stream is not None:
+            self.stream(req.rid, tok)
+        if self.eos_id is not None and tok == self.eos_id:
+            req.finish_reason = "eos"
+        elif len(req.output) >= req.max_new:
+            req.finish_reason = "max_new"
+        elif len(req.prompt) + len(req.output) - 1 >= self.max_len:
+            # the next decode would write KV past the cache ceiling —
+            # report it instead of silently truncating
+            req.finish_reason = "max_len"
+
+    def _retire(self, slot: int) -> None:
+        req = self.sched.release(slot)
+        req.timing.done_t = time.time()
+        self._slot_req[slot] = None
+        self._tok[slot] = 0
+        self._pos[slot] = 0     # park: writes land at pos 0 of a dead row
+        #                         and are overwritten by the next admission
+        self.completed.append(req)
+
+    # ---- the serving loop ------------------------------------------------
+    def step(self) -> bool:
+        """Admit into free slots, then one decode step over the whole pool.
+        Returns False once queue and pool are both empty."""
+        self._admit()
+        active = [s for s in range(self.slots) if self._slot_req[s]]
+        if not active:
+            return not self.sched.idle
+        logits, self.pool = self._decode(
+            self.params, self.pool, jnp.asarray(self._tok[:, None]),
+            jnp.asarray(self._pos))
+        self.decode_steps += 1
+        self.busy_slot_steps += len(active)
+        rows = np.asarray(logits[:, 0])             # one host transfer
+        for s in active:
+            req = self._slot_req[s]
+            self._pos[s] += 1
+            tok = sample_token(rows[s], req.sampling, req.rid,
+                               len(req.output))
+            self._emit(req, tok)
+            if req.finish_reason:
+                self._retire(s)
+            else:
+                self._tok[s] = tok
+        return True
+
+    def run(self) -> Dict:
+        """Serve until the queue drains; returns the stats summary."""
+        t0 = time.time()
+        while self.step():
+            pass
+        return summarize(self.completed, time.time() - t0,
+                         n_slots=self.slots, decode_steps=self.decode_steps,
+                         busy_slot_steps=self.busy_slot_steps,
+                         prefills=self.prefills, waves=self.sched.waves)

@@ -1,0 +1,58 @@
+"""Serving metrics: per-request latency timestamps + engine-level summary.
+
+TTFT (time to first token) spans submit -> first emitted token, so it
+includes queueing delay — the quantity continuous batching improves over the
+drain baseline at mixed loads. Slot occupancy is busy-slot-steps over
+slots x decode-steps: the fraction of decode compute that served a live
+request rather than a parked slot.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+
+@dataclasses.dataclass
+class RequestTiming:
+    submit_t: Optional[float] = None
+    first_token_t: Optional[float] = None
+    done_t: Optional[float] = None
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        if self.submit_t is None or self.first_token_t is None:
+            return None
+        return self.first_token_t - self.submit_t
+
+    @property
+    def total_s(self) -> Optional[float]:
+        if self.submit_t is None or self.done_t is None:
+            return None
+        return self.done_t - self.submit_t
+
+
+def summarize(completed, elapsed_s: float, *, n_slots: int,
+              decode_steps: int, busy_slot_steps: int, prefills: int,
+              waves: int) -> Dict:
+    """Aggregate stats over a finished engine run (flat dict — the
+    benchmark writes these rows into the versioned artifact schema)."""
+    new_tokens = sum(len(r.output) for r in completed)
+    ttfts = [r.timing.ttft_s for r in completed
+             if r.timing.ttft_s is not None]
+    reasons: Dict[str, int] = {}
+    for r in completed:
+        reasons[r.finish_reason] = reasons.get(r.finish_reason, 0) + 1
+    return {
+        "requests": len(completed),
+        "new_tokens": new_tokens,
+        "elapsed_s": elapsed_s,
+        "tok_per_s": new_tokens / max(elapsed_s, 1e-9),
+        "decode_steps": decode_steps,
+        "prefills": prefills,
+        "waves": waves,
+        "occupancy": busy_slot_steps / max(decode_steps * n_slots, 1),
+        "ttft_ms_mean": (sum(ttfts) / len(ttfts) * 1e3) if ttfts else None,
+        "ttft_ms_max": max(ttfts) * 1e3 if ttfts else None,
+        "finish_reasons": ",".join(f"{k}:{v}"
+                                   for k, v in sorted(reasons.items())),
+    }

@@ -1,0 +1,50 @@
+"""Per-request sampling for the serving engine.
+
+Every draw is keyed by (seed, rid, step) through jax.random.fold_in — never
+by batch composition or slot index — so sampled requests keep the same
+batching-invariance contract as greedy ones: a request decodes the same
+tokens whether it is served alone, in a full batch, or admitted mid-decode
+into a reused slot (tests/test_serve.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+KINDS = ("greedy", "temperature", "top_k")
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingConfig:
+    kind: str = "greedy"            # 'greedy' | 'temperature' | 'top_k'
+    temperature: float = 1.0
+    top_k: int = 0                  # used when kind == 'top_k'
+    seed: int = 0
+
+
+GREEDY = SamplingConfig()
+
+
+def sample_token(logits, scfg: SamplingConfig, rid: int, step: int) -> int:
+    """One token id from a (V,) logits row."""
+    if scfg.kind not in KINDS:
+        raise ValueError(f"unknown sampling kind {scfg.kind!r}; "
+                         f"one of {KINDS}")
+    if scfg.kind == "greedy":
+        # host argmax: the engine already pulled the row to host; no jax
+        # dispatch on the hot decode loop (same first-max tie-breaking)
+        return int(np.argmax(np.asarray(logits)))
+    logits = jnp.asarray(logits)
+    scaled = logits.astype(jnp.float32) / max(scfg.temperature, 1e-6)
+    if scfg.kind == "top_k":
+        if scfg.top_k < 1:
+            raise ValueError("kind='top_k' requires top_k >= 1")
+        k = min(scfg.top_k, scaled.shape[-1])
+        kth = jnp.sort(scaled)[-k]
+        scaled = jnp.where(scaled >= kth, scaled, -jnp.inf)
+    key = jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(scfg.seed), rid), step)
+    return int(jax.random.categorical(key, scaled))

@@ -1,92 +1,51 @@
-"""Batched serving loop over a request queue.
+"""Batch-synchronous serving baseline over the continuous-batching engine.
 
-Static-shape friendly (TPU): requests are bucketed into fixed-size batches,
-prompts right-padded to a common length, prefilled in one shot, then decoded
-together (batch-synchronous batching; per-slot continuous batching is a
-documented extension — the multi-pod serve_step in the dry-run is
-position-uniform as well). Works with any quant backend, including the
-approximate-multiplier paths.
+`Server` is `repro.serve.Engine` run under the 'drain' admission policy:
+admit a full batch, decode until every request in the wave finishes, only
+then admit the next wave. It is kept as the measured baseline that
+`benchmarks/serve_perf.py` compares continuous batching against — the two
+share one compiled prefill/decode, so the tok/s gap is pure scheduling.
+
+This replaces the old standalone batch-synchronous demo, which had a live
+correctness bug: prompts were right-padded to the batch max length but the
+first decoded token was read from the *last column*, so shorter prompts in
+a mixed batch decoded from padding. The engine's length-aware prefill
+gathers each row's logits at its true last token, and per-slot positions
+keep every row's decode masked to its own KV (regression test with
+single-request oracles: tests/test_serve.py). Requests also carry an
+explicit `finish_reason` now — the old `steps = min(max_new, max_len -
+plen - 1)` silently dropped tokens.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.models import transformer_lm as TLM
 from repro.models.transformer_lm import ArchConfig
 from repro.parallel.sharding import ShardingRules, DEFAULT_RULES
+from repro.serve import Engine, ServeRequest
 
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray                 # (len,) int32
-    max_new: int = 16
-    output: Optional[List[int]] = None
+# historical name: callers built `Request(rid=, prompt=, max_new=)`
+Request = ServeRequest
 
 
 class Server:
-    """Single-host reference server (pod-scale serving is exercised by the
-    dry-run's serve_step cells)."""
+    """Single-host batch-synchronous reference server (drain policy)."""
 
     def __init__(self, cfg: ArchConfig, params, batch_slots: int = 4,
-                 max_len: int = 256, rules: ShardingRules = DEFAULT_RULES):
-        assert not cfg.embed_stub, "serving demo uses token models"
-        self.cfg, self.params, self.rules = cfg, params, rules
-        self.slots = batch_slots
-        self.max_len = max_len
-        self.queue: List[Request] = []
-        self.completed: List[Request] = []
-        self._prefill = jax.jit(
-            lambda p, t, c: TLM.prefill(p, t, cfg, c, rules))
-        self._decode = jax.jit(
-            lambda p, c, t, pos: TLM.decode_step(p, t, pos, cfg, c, rules))
+                 max_len: int = 256, rules: ShardingRules = DEFAULT_RULES,
+                 eos_id: Optional[int] = None):
+        self.engine = Engine(cfg, params, slots=batch_slots,
+                             max_len=max_len, rules=rules, eos_id=eos_id,
+                             admission="drain")
 
-    def submit(self, req: Request):
-        self.queue.append(req)
+    @property
+    def completed(self):
+        return self.engine.completed
 
-    def _run_batch(self, batch: List[Request]):
-        b = self.slots
-        plen = max(len(r.prompt) for r in batch)
-        toks = np.zeros((b, plen), np.int32)
-        for i, r in enumerate(batch):
-            toks[i, :len(r.prompt)] = r.prompt      # right-aligned decode pos
-        caches = TLM.init_cache(self.cfg, b, self.max_len, jnp.float32)
-        logits, caches = self._prefill(self.params, jnp.asarray(toks), caches)
-        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-        for r in batch:
-            r.output = []
-        max_new = max(r.max_new for r in batch)
-        steps = min(max_new, self.max_len - plen - 1)
-        pos = plen
-        for _ in range(steps):
-            for i, r in enumerate(batch):
-                if len(r.output) < r.max_new:
-                    r.output.append(int(nxt[i]))
-            logits, caches = self._decode(self.params, caches,
-                                          nxt[:, None], jnp.int32(pos))
-            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-            pos += 1
-        self.completed.extend(batch)
+    def submit(self, req: Request) -> None:
+        self.engine.submit(req)
 
     def run(self) -> Dict[str, Any]:
-        t0 = time.time()
-        n_batches = 0
-        while self.queue:
-            batch = self.queue[:self.slots]
-            self.queue = self.queue[self.slots:]
-            while len(batch) < self.slots:          # pad with dummy copies
-                batch.append(dataclasses.replace(batch[-1], rid=-1))
-            self._run_batch([r for r in batch])
-            n_batches += 1
-        done = [r for r in self.completed if r.rid >= 0]
-        toks = sum(len(r.output) for r in done)
-        dt = time.time() - t0
-        return {"requests": len(done), "batches": n_batches,
-                "new_tokens": toks, "elapsed_s": dt,
-                "tok_per_s": toks / max(dt, 1e-9)}
+        stats = self.engine.run()
+        stats["batches"] = stats["waves"]   # historical key
+        return stats
