@@ -1,16 +1,37 @@
-"""Kernel/backend micro-benchmarks: us_per_call for every registered
-integer-matmul backend on CPU, plus the fused-epilogue comparison (Pallas
-dequant+bias+ReLU in-kernel vs the unfused jnp composition) and structural
-cost (vector-op counts) for the TPU model. Wall-times here are CPU reference
-numbers; the TPU roofline for the kernels is derived in
+"""Kernel/backend micro-benchmarks with a shape sweep.
+
+Times every registered integer-matmul backend at 256^3 and the dense
+(MXU-shaped) backends up to 1024^3, best-of-N with explicit warmup, plus:
+
+  - the fused-epilogue comparison (Pallas dequant+bias+ReLU in-kernel vs
+    the unfused jnp composition),
+  - the approx_lut staging before/after (legacy small-chunk ``lax.map``
+    path vs the device-cached single-shot gather),
+  - a ``corr_rank`` column: the exact factor count R of the rank-factored
+    correction each backend's semantics cost as dense linear algebra
+    (core/factor.py).
+
+Operands are passed as *arguments* to the jitted functions — the previous
+harness closed over them, letting XLA constant-fold the pure-matmul
+backends at compile time and report fantasy wall-times (int8_exact at
+256^3 "ran" in 17 us ~ 1 TMAC/s on 2 cores). Numbers from the two
+harnesses are not comparable; the bench-gate baseline was reset when this
+one landed.
+
+Wall-times are CPU reference numbers (the ``*_pallas`` entries run in
+interpret mode off-TPU); the TPU roofline for the kernels is derived in
 benchmarks/roofline.py from the dry-run artifacts.
 
 Backends are enumerated from the registry (repro.quant.matmul) — a newly
-registered backend shows up here with no edits."""
+registered backend shows up here with no edits. ``benchmarks/run.py
+--only kernels`` additionally writes the rows to
+``experiments/bench_kernels.json`` in the versioned artifact schema so the
+perf trajectory is diffable across PRs (scripts/bench_gate.py).
+"""
 from __future__ import annotations
 
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -19,59 +40,165 @@ import numpy as np
 from repro.quant.quantize import QuantConfig
 from repro.quant import matmul as QM
 
+# Backends whose work is dense linear algebra — feasible at large shapes.
+DENSE = ("int8_exact", "approx_stage1", "approx_stage1_fused",
+         "approx_rank1")
+# Element-wise emulation: O(M*K*N) deficit/gather work — 512^3 is already
+# seconds on CPU, 1024^3 is excluded ("where feasible").
+EMULATION_MAX = 512
+# Pallas interpret mode (off-TPU) pays a large per-op interpreter tax;
+# only the acceptance shape is swept.
+PALLAS_MAX = 256
 
-def _time(fn, reps=5) -> float:
-    jax.block_until_ready(fn())
-    t0 = time.time()
+SHAPES = (256, 512, 1024)
+
+
+def _best_of(fn, *args, reps: int, warmup: int) -> float:
+    """Best-of-N wall time in us, after explicit warmup calls (the first
+    of which pays compilation)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
     for _ in range(reps):
-        jax.block_until_ready(fn())
-    return (time.time() - t0) / reps * 1e6
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def _max_shape(name: str) -> int:
+    if name in DENSE:
+        return 1 << 30      # capped only by the swept shape list
+    if name.endswith("_pallas"):
+        return PALLAS_MAX
+    return EMULATION_MAX
+
+
+def _corr_rank(name: str) -> Optional[int]:
+    from repro.eval.profiles import correction_cost
+    return correction_cost(name, "proposed")[0]
+
+
+def _operands(rng, m, k, n):
+    x = jnp.asarray(rng.integers(-127, 128, (m, k)).astype(np.int8))
+    w = jnp.asarray(rng.integers(-127, 128, (k, n)).astype(np.int8))
+    return x, w
 
 
 def run(quick: bool = True) -> List[Dict]:
     rng = np.random.default_rng(0)
-    m = k = n = 256 if quick else 512
-    x = jnp.asarray(rng.integers(-127, 128, (m, k)).astype(np.int8))
-    w = jnp.asarray(rng.integers(-127, 128, (k, n)).astype(np.int8))
-    rows = []
-    base = None
-    for name in QM.list_backends():
-        be = QM.get_backend(name)
-        cfg = QuantConfig(backend=name)
-        jfn = jax.jit(lambda f=be.fn, c=cfg: f(x, w, c))
-        us = _time(jfn)
-        if base is None:
-            base = us
-        rows.append({"backend": name, "m": m, "k": k, "n": n,
-                     "us_per_call": us, "slowdown_vs_exact": us / base})
-        print(f"kernel_perf: {name:22s} {us:10.1f} us  "
-              f"({us / base:6.1f}x exact)  [{m}x{k}x{n} int8]")
+    reps = 3 if quick else 5
+    warmup = 2
+    shapes = SHAPES if quick else SHAPES + (2048,)
+    rows: List[Dict] = []
+
+    for side in shapes:
+        m = k = n = side
+        x, w = _operands(rng, m, k, n)
+        base = deficit_us = None
+        shape_rows = []
+        for name in QM.list_backends():
+            if side > _max_shape(name):
+                continue
+            be = QM.get_backend(name)
+            cfg = QuantConfig(backend=name)
+            jfn = jax.jit(lambda a, b, f=be.fn, c=cfg: f(a, b, c))
+            us = _best_of(jfn, x, w, reps=reps, warmup=warmup)
+            if name == "int8_exact":
+                base = us
+            if name == "approx_deficit":
+                deficit_us = us
+            shape_rows.append({"backend": name, "m": m, "k": k, "n": n,
+                               "us_per_call": us,
+                               "corr_rank": _corr_rank(name)})
+        for r in shape_rows:
+            r["slowdown_vs_exact"] = (r["us_per_call"] / base
+                                      if base else None)
+            r["speedup_vs_deficit"] = (deficit_us / r["us_per_call"]
+                                       if deficit_us else None)
+            tag = (f"{r['speedup_vs_deficit']:6.1f}x deficit"
+                   if r["speedup_vs_deficit"] else " " * 14)
+            print(f"kernel_perf: {r['backend']:22s} "
+                  f"{r['us_per_call']:12.1f} us  "
+                  f"({r['slowdown_vs_exact']:8.1f}x exact, {tag})  "
+                  f"[{m}x{k}x{n} int8]")
+        rows.extend(shape_rows)
+
+    # approx_lut staging before/after (satellite). Under jit the LUT is a
+    # baked constant either way; the legacy cost showed up on *eager*
+    # calls (layer-sized shapes), where the numpy LUT was re-staged and
+    # the lax.map machinery re-traced on every call. Both variants are
+    # timed eagerly at a layer shape.
+    m, k, n = 16, 128, 32
+    x, w = _operands(rng, m, k, n)
+    cfg_l = QuantConfig(backend="approx_lut")
+    mult_cfg = QM._mult_cfg(cfg_l)
+    err_np = QM._err_lut_i16(mult_cfg)           # numpy: restaged per call
+
+    def lut_legacy(a, b):
+        xi = a.astype(jnp.uint8).astype(jnp.int32)
+        wi = b.astype(jnp.uint8).astype(jnp.int32)
+        tbl = jnp.asarray(err_np)
+        chunk_m = max(1, min(m, (1 << 22) // max(1, k * n)))
+        xi = jnp.pad(xi, ((0, (-m) % chunk_m), (0, 0)))
+
+        def body(xc):
+            idx = xc[:, :, None] * 256 + wi[None, :, :]
+            return jnp.take(tbl, idx, axis=0).astype(jnp.int32).sum(axis=1)
+
+        err = jax.lax.map(body, xi.reshape(-1, chunk_m, k))
+        return QM.int8_matmul(a, b) + err.reshape(-1, n)[:m]
+
+    us_legacy = _best_of(lut_legacy, x, w, reps=reps, warmup=warmup)
+    us_now = _best_of(lambda a, b: QM.approx_matmul_lut(a, b, cfg_l),
+                      x, w, reps=reps, warmup=warmup)
+    for tag, us in (("approx_lut_eager_legacy", us_legacy),
+                    ("approx_lut_eager_cached", us_now)):
+        rows.append({"backend": tag, "m": m, "k": k, "n": n,
+                     "us_per_call": us, "corr_rank": None,
+                     "slowdown_vs_exact": None, "speedup_vs_deficit": None,
+                     "note": "eager (no jit) per-call cost at a layer "
+                             "shape; legacy = per-call LUT staging + "
+                             "always-map"})
+    print(f"kernel_perf: approx_lut eager staging legacy {us_legacy:.1f} "
+          f"us vs cached {us_now:.1f} us "
+          f"({us_legacy / us_now:.1f}x faster)")
 
     # fused epilogue: Pallas (dequant+bias+ReLU on the final k-step) vs the
     # unfused jnp approx_deficit reference followed by the same epilogue
+    m = k = n = 256
+    x, w = _operands(rng, m, k, n)
     scale = jnp.full((1, n), 0.01, jnp.float32)
     bias = jnp.asarray(rng.normal(size=(1, n)).astype(np.float32))
     fused_be = QM.get_backend("approx_deficit_pallas")
     cfg_p = QuantConfig(backend="approx_deficit_pallas")
     cfg_r = QuantConfig(backend="approx_deficit")
-    fused = jax.jit(lambda: fused_be.fused(x, w, cfg_p, scale, bias, True))
-    unfused = jax.jit(lambda: jnp.maximum(
-        QM.approx_matmul_deficit(x, w, cfg_r).astype(jnp.float32) * scale
+    fused = jax.jit(lambda a, b: fused_be.fused(a, b, cfg_p, scale, bias,
+                                                True))
+    unfused = jax.jit(lambda a, b: jnp.maximum(
+        QM.approx_matmul_deficit(a, b, cfg_r).astype(jnp.float32) * scale
         + bias, 0.0))
-    us_f = _time(fused)
-    us_u = _time(unfused)
+    us_f = _best_of(fused, x, w, reps=reps, warmup=warmup)
+    us_u = _best_of(unfused, x, w, reps=reps, warmup=warmup)
     for tag, us in (("fused_epilogue_pallas", us_f),
                     ("unfused_jnp_deficit", us_u)):
         rows.append({"backend": tag, "m": m, "k": k, "n": n,
-                     "us_per_call": us, "slowdown_vs_exact": us / base})
-        print(f"kernel_perf: {tag:22s} {us:10.1f} us  "
-              f"({us / base:6.1f}x exact)  [{m}x{k}x{n} int8+epilogue]")
+                     "us_per_call": us, "corr_rank": None,
+                     "slowdown_vs_exact": None,
+                     "speedup_vs_deficit": None})
     print(f"kernel_perf: fused/unfused epilogue ratio = {us_f / us_u:.2f} "
           "(<= 1.0 means the in-kernel epilogue wins)")
-
-    # structural cost of the deficit kernel (ops per element, TPU model)
-    rows.append({"backend": "deficit_ops_per_elem", "m": 0, "k": 0, "n": 0,
-                 "us_per_call": 0.0, "slowdown_vs_exact": 0.0,
-                 "note": "~60 VPU bit-ops/elem vs 1 MXU MAC; stage1 = "
-                         "8 MXU matmuls total"})
     return rows
+
+
+def artifact(rows: List[Dict], quick: bool) -> Dict:
+    """Wrap the rows in the versioned eval-artifact schema (v1)."""
+    from repro.eval import artifacts
+    return artifacts.make_artifact(
+        "bench_kernels", {"kernel_perf": rows},
+        {"smoke": bool(quick), "seed": 0,
+         "jax_backend": jax.default_backend(),
+         "timing": "best-of-N, operands passed as jit arguments",
+         "note": "CPU reference wall-times; *_pallas = interpret mode "
+                 "off-TPU; corr_rank = exact factor count R of the "
+                 "rank-factored correction (core/factor.py)"})

@@ -21,9 +21,14 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table2,table3,table4,table5,"
                          "fig7,kernels,lm,serve")
+    ap.add_argument("--out", type=Path, default=OUT,
+                    help="output directory for result artifacts (default: "
+                         "experiments/; scripts/bench_gate.py redirects "
+                         "this to a scratch dir)")
     args = ap.parse_args(sys.argv[1:])
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
+    out_dir: Path = args.out
 
     from benchmarks import tables as T
     from benchmarks import kernel_perf as K
@@ -73,19 +78,27 @@ def main() -> None:
     bench("lm", lambda: LMP.run(quick=quick))
     bench("serve", lambda: SP.run(quick=quick))
 
-    OUT.mkdir(exist_ok=True)
-    # versioned standalone artifacts: the serving-throughput trajectories
+    out_dir.mkdir(parents=True, exist_ok=True)
+    # versioned standalone artifacts: the kernel/serving perf trajectories
     # are diffed across PRs like the eval tables (schema v1)
+    if "kernels" in results:
+        from repro.eval import artifacts
+        artifacts.save(out_dir / "bench_kernels.json",
+                       K.artifact(results["kernels"], quick))
     if "lm" in results:
         from repro.eval import artifacts
-        artifacts.save(OUT / "bench_lm.json",
+        artifacts.save(out_dir / "bench_lm.json",
                        LMP.artifact(results["lm"], quick))
     if "serve" in results:
         from repro.eval import artifacts
-        artifacts.save(OUT / "bench_serve.json",
+        artifacts.save(out_dir / "bench_serve.json",
                        SP.artifact(results["serve"], quick))
-    (OUT / "bench_results.json").write_text(json.dumps(results, indent=1,
-                                                       default=float))
+    # a partial run (--only) must not drop the other suites' committed
+    # baselines: merge over the existing file
+    merged_path = out_dir / "bench_results.json"
+    if only and merged_path.exists():
+        results = {**json.loads(merged_path.read_text()), **results}
+    merged_path.write_text(json.dumps(results, indent=1, default=float))
     print("\nname,us_per_call,derived")
     for line in csv:
         print(line)

@@ -68,8 +68,37 @@ def _metrics(family: str, mult: str) -> Optional[X.ErrorMetrics]:
     return None
 
 
+def correction_cost(backend: str, multiplier: str):
+    """(corr_rank, mac_proxy) for one backend.
+
+    corr_rank: exact factor count R of the multiplier's error-table
+    factorization on the int8 domain (core/factor.py) — the number of
+    rank-1 correction terms the backend's semantics cost when executed as
+    dense linear algebra. Shown for element-wise emulation backends too
+    (their MXU-shaped equivalent), 0 for exact int8.
+
+    mac_proxy: MXU MACs issued per output MAC by the backend as actually
+    implemented (1 exact dot + correction dots); None where execution is
+    not MAC-shaped (bf16 float compute, gather/VPU-bound emulation).
+    """
+    if backend == "int8_exact":
+        return 0, 1.0
+    if backend.startswith("approx_stage1"):
+        n_sites = len(QM.STAGE1_SITES)
+        macs = 4.0 if backend == "approx_stage1_fused" else 1.0 + n_sites
+        return n_sites, macs
+    if backend.startswith("approx_rank1"):
+        info = QM.rank1_info(multiplier)
+        per_term = info["digits"] if backend.endswith("_pallas") else 1
+        return info["R"], 1.0 + per_term * info["R"]
+    if _family(backend) == "paper":      # element-wise emulation of the
+        return QM.rank1_info(multiplier)["R"], None   # same error table
+    return None, None
+
+
 def backend_profile(backend: str, multiplier: str = "proposed") -> Dict:
-    """Flat dict of er/nmed/mred (%) + proxy energy/pdp for one backend.
+    """Flat dict of er/nmed/mred (%) + proxy energy/pdp + correction
+    rank / MAC-count proxy for one backend.
 
     Values are None (rendered as an em dash) where the concept does not
     apply: bf16 runs no integer products; the stage1 family executes on
@@ -79,10 +108,13 @@ def backend_profile(backend: str, multiplier: str = "proposed") -> Dict:
     family = _family(backend)
     m = _metrics(family, multiplier) if family else None
     d = m.to_dict() if m is not None else {}
+    corr_rank, mac_proxy = correction_cost(backend, multiplier)
     row: Dict = {
         "er": None if m is None else round(d["er_pct"], 3),
         "nmed": None if m is None else round(d["nmed_pct"], 3),
         "mred": None if m is None else round(d["mred_pct"], 3),
+        "corr_rank": corr_rank,
+        "mac_proxy": mac_proxy,
         "proxy_energy": None,
         "proxy_pdp": None,
     }

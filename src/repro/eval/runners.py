@@ -153,7 +153,10 @@ def run_serve(smoke: bool = False, seed: int = 0) -> Dict:
 
 _PROFILE_COLS: Tuple[Column, ...] = (
     ("er", "ER %", ".3f"), ("nmed", "NMED %", ".3f"),
-    ("mred", "MRED %", ".3f"), ("proxy_energy", "proxy energy (u)", ".1f"),
+    ("mred", "MRED %", ".3f"),
+    ("corr_rank", "corr rank R", None),
+    ("mac_proxy", "MACs/MAC", ".0f"),
+    ("proxy_energy", "proxy energy (u)", ".1f"),
     ("proxy_pdp", "proxy PDP (u)", ".1f"),
 )
 

@@ -17,10 +17,22 @@ kernels:
    ~8x an exact matmul, ~40x cheaper than full emulation and 3.5x more
    accurate than the paper's multiplier — see EXPERIMENTS.md).
 
+3. rank1 — bit-exact emulation with NO element-wise deficit work: the
+   error table is factored exactly as E = U @ V (core/factor.py), the
+   sign-folded factor features are gathered outside the kernel (O(M*K + K*N)
+   tiny-table gathers), and each (bm, bn, bk) tile issues the correction as
+   int8 dot_generals on the accumulator tile — one per base-128 digit plane
+   of V — alongside the exact int8 dot. Every op the kernel runs is an MXU
+   matmul; correction contraction width is bk * R (R = per-design factor
+   count, 49 for the proposed compressor on the int8 domain).
+
 Entry points:
 
 ``approx_matmul_pallas``   (M, K) x (K, N) -> int32 (M, N); the raw
                            integer contract shared with the jnp backends.
+``rank1_matmul_pallas``    same contract for the rank-factored kernel
+                           (separate entry: it stages factor features and
+                           carries extra operands).
 ``fused_matmul_pallas``    (B, M, K) or (M, K) int8 -> float32; the int32
                            accumulator lives in VMEM scratch and the
                            epilogue (dequant scale — per-tensor or
@@ -43,7 +55,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import deficit as D
-from repro.quant.matmul import STAGE1_SITES
+from repro.core import factor as F
+from repro.core.factor import STAGE1_SITES
 
 
 def _exact_dot(x, w):
@@ -131,6 +144,33 @@ def _stage1_kernel(x_ref, w_ref, o_ref):
     o_ref[...] += _exact_dot(x, w) - _stage1_tile_corr(x, w)
 
 
+def _rank1_tile_corr(xf, wf_digits):
+    """Rank-factored correction for one tile: one int8 dot per digit plane
+    of V, recomposed by base-128 shifts (exact in int32 modular arithmetic;
+    the true value fits int32)."""
+    corr = None
+    for d, wf in enumerate(wf_digits):
+        term = _exact_dot(xf, wf) << (7 * d)
+        corr = term if corr is None else corr + term
+    return corr
+
+
+def _rank1_kernel(*refs, nd: int):
+    x_ref, w_ref, xf_ref = refs[:3]
+    wf_refs = refs[3:3 + nd]
+    o_ref = refs[3 + nd]
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    w = w_ref[...]
+    o_ref[...] += _exact_dot(x, w) - _rank1_tile_corr(
+        xf_ref[...], [r[...] for r in wf_refs])
+
+
 # ---------------------------------------------------------------------------
 # fused-epilogue kernel (batched, float32 out)
 # ---------------------------------------------------------------------------
@@ -152,6 +192,27 @@ def _fused_kernel(x_ref, w_ref, s_ref, b_ref, o_ref, acc_ref, *,
         acc = acc - _stage1_tile_corr(x, w)
     # variant == "exact": plain int8 dot
     acc_ref[...] += acc
+
+    @pl.when(k_idx == nk - 1)
+    def _epilogue():
+        out = acc_ref[...].astype(jnp.float32) * s_ref[...] + b_ref[...]
+        if relu:
+            out = jnp.maximum(out, 0.0)
+        o_ref[0] = out
+
+
+def _rank1_fused_kernel(*refs, nk: int, nd: int, relu: bool):
+    x_ref, w_ref, xf_ref = refs[:3]
+    wf_refs = refs[3:3 + nd]
+    s_ref, b_ref, o_ref, acc_ref = refs[3 + nd:]
+    k_idx = pl.program_id(3)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += _exact_dot(x_ref[0], w_ref[...]) - _rank1_tile_corr(
+        xf_ref[0], [r[...] for r in wf_refs])
 
     @pl.when(k_idx == nk - 1)
     def _epilogue():
@@ -267,5 +328,120 @@ def fused_matmul_pallas(x_q: jax.Array, w_q: jax.Array,
         interpret=interpret,
         **_compiler_params(interpret, 3),
     )(xp, wp, sp, bp)
+    out = out[:, :m, :n]
+    return out[0] if squeeze else out
+
+
+# ---------------------------------------------------------------------------
+# rank-factored kernel (extra factor-feature operands)
+# ---------------------------------------------------------------------------
+
+def _rank1_features(xp: jax.Array, wp: jax.Array, design: str):
+    """Sign-folded factor features for padded int8 operands.
+
+    xf: (..., M, K*R) int8 in {-1, 0, 1} (k-major feature order);
+    wfs: one (K*R, N) int8 tile per base-128 digit plane of V.
+    Zero padding is safe: a zero operand gathers all-zero features.
+    """
+    fac = F.factorize(design)
+    r = fac.R
+    u_tbl = jnp.asarray(fac.u_signed)                       # (256, R) int8
+    ix = xp.astype(jnp.uint8).astype(jnp.int32)
+    iw = wp.astype(jnp.uint8).astype(jnp.int32)
+    xf = jnp.take(u_tbl, ix, axis=0).reshape(*xp.shape[:-1],
+                                             xp.shape[-1] * r)
+    wfs = []
+    for plane in F.v_digit_planes(fac):
+        wf = jnp.take(jnp.asarray(plane), iw, axis=1)       # (R, K, N) int8
+        wfs.append(wf.transpose(1, 0, 2).reshape(wp.shape[0] * r,
+                                                 wp.shape[1]))
+    return xf, wfs
+
+
+@functools.partial(jax.jit, static_argnames=("block", "design", "interpret"))
+def rank1_matmul_pallas(x_q: jax.Array, w_q: jax.Array,
+                        block: Tuple[int, int, int] = (128, 128, 128),
+                        design: str = "proposed",
+                        interpret: bool = True) -> jax.Array:
+    """x_q (M,K) int8, w_q (K,N) int8 -> (M,N) int32, bit-identical to the
+    paper multiplier; every kernel op is a dot_general (no deficit planes).
+    """
+    fac = F.factorize(design)
+    r, nd = fac.R, fac.n_digits
+    m, k = x_q.shape
+    _, n = w_q.shape
+    bm, bn, bk = block
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    xp = _pad_to(x_q, (bm, bk), (0, 1))
+    wp = _pad_to(w_q, (bk, bn), (0, 1))
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    xf, wfs = _rank1_features(xp, wp, design)
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    out = pl.pallas_call(
+        functools.partial(_rank1_kernel, nd=nd),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+                  pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+                  pl.BlockSpec((bm, bk * r), lambda i, j, kk: (i, kk))]
+                 + [pl.BlockSpec((bk * r, bn), lambda i, j, kk: (kk, j))
+                    for _ in range(nd)],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        interpret=interpret,
+        **_compiler_params(interpret, 2),
+    )(xp, wp, xf, *wfs)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "design", "relu",
+                                             "interpret"))
+def rank1_fused_matmul_pallas(x_q: jax.Array, w_q: jax.Array,
+                              scale: jax.Array, bias: jax.Array,
+                              block: Tuple[int, int, int] = (128, 128, 128),
+                              design: str = "proposed",
+                              relu: bool = False,
+                              interpret: bool = True) -> jax.Array:
+    """Rank-factored kernel with the dequant(+bias)(+ReLU) epilogue fused
+    in-kernel; same operand contract as `fused_matmul_pallas` (leading
+    batch dim is a grid axis)."""
+    from jax.experimental.pallas import tpu as pltpu
+    fac = F.factorize(design)
+    r, nd = fac.R, fac.n_digits
+    squeeze = x_q.ndim == 2
+    if squeeze:
+        x_q = x_q[None]
+    batch, m, k = x_q.shape
+    n = w_q.shape[1]
+    bm, bn, bk = block
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    xp = _pad_to(x_q, (bm, bk), (1, 2))
+    wp = _pad_to(w_q, (bk, bn), (0, 1))
+    _, mp, kp = xp.shape
+    np_ = wp.shape[1]
+    xf, wfs = _rank1_features(xp, wp, design)
+    sp = _pad_to(scale.astype(jnp.float32), (bn,), (1,))
+    bp = _pad_to(bias.astype(jnp.float32), (bn,), (1,))
+    grid = (batch, mp // bm, np_ // bn, kp // bk)
+
+    out = pl.pallas_call(
+        functools.partial(_rank1_fused_kernel, nk=kp // bk, nd=nd,
+                          relu=relu),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, bm, bk), lambda b, i, j, kk: (b, i, kk)),
+                  pl.BlockSpec((bk, bn), lambda b, i, j, kk: (kk, j)),
+                  pl.BlockSpec((1, bm, bk * r),
+                               lambda b, i, j, kk: (b, i, kk))]
+                 + [pl.BlockSpec((bk * r, bn), lambda b, i, j, kk: (kk, j))
+                    for _ in range(nd)]
+                 + [pl.BlockSpec((1, bn), lambda b, i, j, kk: (0, j)),
+                    pl.BlockSpec((1, bn), lambda b, i, j, kk: (0, j))],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda b, i, j, kk: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((batch, mp, np_), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+        **_compiler_params(interpret, 3),
+    )(xp, wp, xf, *wfs, sp, bp)
     out = out[:, :m, :n]
     return out[0] if squeeze else out

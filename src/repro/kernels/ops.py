@@ -13,7 +13,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.approx_matmul import (approx_matmul_pallas,
-                                         fused_matmul_pallas)
+                                         fused_matmul_pallas,
+                                         rank1_fused_matmul_pallas,
+                                         rank1_matmul_pallas)
 from repro.quant.quantize import QuantConfig
 
 
@@ -52,4 +54,22 @@ def stage1_matmul_fused(x_q: jax.Array, w_q: jax.Array, cfg: QuantConfig,
     """Stage-1 kernel with fused dequant(+bias)(+ReLU) epilogue."""
     return fused_matmul_pallas(
         x_q, w_q, scale, bias, variant="stage1",
+        relu=relu, interpret=_interpret_default())
+
+
+def rank1_matmul(x_q: jax.Array, w_q: jax.Array,
+                 cfg: QuantConfig) -> jax.Array:
+    """Bit-exact rank-factored matmul (paper semantics, all-MXU tile work)."""
+    return rank1_matmul_pallas(
+        x_q, w_q, design=cfg.multiplier, interpret=_interpret_default())
+
+
+def rank1_matmul_fused(x_q: jax.Array, w_q: jax.Array, cfg: QuantConfig,
+                       scale: jax.Array, bias: jax.Array,
+                       relu: bool = False) -> jax.Array:
+    """Rank-factored kernel with fused dequant(+bias)(+ReLU) epilogue.
+
+    x_q may carry a leading batch dim: (B, M, K) or (M, K)."""
+    return rank1_fused_matmul_pallas(
+        x_q, w_q, scale, bias, design=cfg.multiplier,
         relu=relu, interpret=_interpret_default())

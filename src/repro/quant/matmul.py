@@ -13,11 +13,20 @@ where P is the (possibly approximate) signed product of two int8 values in
                         keeps only the rank-1-factorizable stage-1 compressor
                         errors -> 1 + ~6 extra MXU matmuls, see DESIGN.md §3)
   approx_stage1_fused   bit-identical to approx_stage1 in 4 matmuls
+  approx_rank1          P identical to approx_lut, computed as exact int8
+                        matmul minus R rank-factored correction GEMMs
+                        (core/factor.py; MXU-shaped, no element-wise
+                        deficit planes; float32 GEMMs with proven-exact
+                        integer accumulation, K-chunked past k_exact_f32)
   approx_deficit_pallas the Pallas kernel (bit-identical to approx_lut);
                         supports the fused dequant/bias/ReLU epilogue and
                         leading-dim batching
   approx_stage1_pallas  Pallas stage-1 kernel (bit-identical to
                         approx_stage1); fused epilogue likewise
+  approx_rank1_pallas   Pallas rank-factored kernel: exact tile dot plus
+                        int8 digit-plane correction dots on the
+                        accumulator tile (bit-identical to approx_lut);
+                        fused epilogue likewise
 
 New backends are added with `register_backend(name, fn)` — per-layer
 selection then works everywhere `QuantConfig.backend` is consumed (dense,
@@ -36,18 +45,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import factor as factorlib
 from repro.core import luts
+# Canonical site list lives with the factorization machinery; re-exported
+# here because the stage-1 backends and Pallas kernels index it.
+from repro.core.factor import STAGE1_SITES  # noqa: F401  (re-export)
 from repro.core.multiplier import MultiplierConfig, proposed_multiplier
 from repro.quant.quantize import QuantConfig, QMAX, abs_max_scale, quantize
-
-# Stage-1 compressor sites of the pinned tree: (column, a-row window start,
-# b-col window start). Window length is always 4; site fires iff
-# a_bits[r:r+4] and b_bits[c-r-3 ... ] are all ones. Derived from
-# multiplier.STAGE1_PLAN with head input selection.
-STAGE1_SITES = (
-    (5, 0, 2), (6, 0, 3), (7, 0, 4), (7, 4, 0),
-    (8, 1, 4), (9, 2, 4), (10, 3, 4),
-)
 
 
 def _err_lut_i16(mult_cfg: MultiplierConfig) -> np.ndarray:
@@ -63,6 +67,17 @@ def _err_lut_cached(key: str, mult_cfg: MultiplierConfig) -> np.ndarray:
     sval = np.where(vals < 128, vals, vals - 256)
     exact = sval[:, None] * sval[None, :]
     return (signed - exact).astype(np.int16).reshape(-1)
+
+
+@lru_cache(maxsize=16)
+def _err_lut_device(key: str, mult_cfg: MultiplierConfig) -> jax.Array:
+    """Device-resident flattened error LUT, staged once per config (the
+    numpy table was previously re-staged on every eager call).
+
+    Staged eagerly even when first touched inside a jit trace — a traced
+    value must never land in the cache."""
+    with jax.ensure_compile_time_eval():
+        return jnp.asarray(_err_lut_cached(key, mult_cfg))
 
 
 def _mult_cfg(cfg: QuantConfig) -> MultiplierConfig:
@@ -83,27 +98,36 @@ def int8_matmul(x_q: jax.Array, w_q: jax.Array) -> jax.Array:
 
 
 def _approx_error_lut(x_q, w_q, err_flat, chunk_elems=1 << 22):
-    """sum_k E[x[m,k], w[k,n]] via chunked gather (reference path)."""
+    """sum_k E[x[m,k], w[k,n]] via gather (reference path).
+
+    Problems at or below ``chunk_elems`` (M*K*N) run in one shot — no
+    ``lax.map`` machinery for the small layer shapes the eval suites sweep;
+    larger ones chunk over rows to keep the (m, k, n) intermediate
+    cache-resident (measured on CPU: 4M-element chunks are ~4x faster at
+    256^3 than one 16M-element shot — bigger is not better)."""
     m, k = x_q.shape
     n = w_q.shape[1]
     xi = x_q.astype(jnp.uint8).astype(jnp.int32)
     wi = w_q.astype(jnp.uint8).astype(jnp.int32)
-    tbl = jnp.asarray(err_flat)
-    chunk_m = max(1, min(m, chunk_elems // max(1, k * n)))
-    pad = (-m) % chunk_m
-    xi = jnp.pad(xi, ((0, pad), (0, 0)))
+    tbl = err_flat if isinstance(err_flat, jax.Array) else jnp.asarray(err_flat)
 
     def body(xc):
         idx = xc[:, :, None] * 256 + wi[None, :, :]
         return jnp.take(tbl, idx, axis=0).astype(jnp.int32).sum(axis=1)
 
+    if m * k * n <= chunk_elems:
+        return body(xi)
+    chunk_m = max(1, min(m, chunk_elems // max(1, k * n)))
+    pad = (-m) % chunk_m
+    xi = jnp.pad(xi, ((0, pad), (0, 0)))
     out = jax.lax.map(body, xi.reshape(-1, chunk_m, k))
     return out.reshape(-1, n)[:m]
 
 
 def approx_matmul_lut(x_q, w_q, cfg: QuantConfig) -> jax.Array:
     """Bit-exact approximate matmul via the signed error LUT."""
-    err = _err_lut_i16(_mult_cfg(cfg))
+    mult_cfg = _mult_cfg(cfg)
+    err = _err_lut_device(mult_cfg.key, mult_cfg)
     return int8_matmul(x_q, w_q) + _approx_error_lut(x_q, w_q, err)
 
 
@@ -208,6 +232,74 @@ def approx_matmul_stage1_fused(x_q, w_q, cfg: QuantConfig) -> jax.Array:
     vB = _window_and(wmag, 4).astype(jnp.int32) * wsgn
     out = out - f32mm(uB, vB)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Rank-factored correction backend (core/factor.py)
+# ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=16)
+def _rank1_tables_f32(design: str):
+    """Sign-folded gather tables of the int8-domain factorization, staged
+    on device once per design as float32 (u in {-1,0,1}, |v| small ints).
+    Staged eagerly even under a jit trace (no tracers in the cache)."""
+    fac = factorlib.factorize(design)
+    with jax.ensure_compile_time_eval():
+        return (jnp.asarray(fac.u_signed.astype(np.float32)),
+                jnp.asarray(fac.v_signed.astype(np.float32)))
+
+
+def rank1_info(design: str) -> Dict:
+    """Correction-complexity summary for one design (profiles/bench):
+    R (factor count), exact rank, digit planes, f32-exact K bound."""
+    fac = factorlib.factorize(design)
+    return {"R": fac.R, "rank": fac.rank, "digits": fac.n_digits,
+            "k_exact_f32": fac.k_exact_f32,
+            "stage1_terms": len(fac.stage1)}
+
+
+def approx_matmul_rank1(x_q, w_q, cfg: QuantConfig) -> jax.Array:
+    """Bit-exact approximate matmul as exact int8 dot + rank-factored
+    correction GEMMs — no O(M*K*N) element-wise deficit work.
+
+    The error table factors exactly as E = U @ V (core/factor.py), so the
+    correction is one dense contraction over (K, R):
+
+        corr[m, n] = sum_{k, s} u[x[m,k], s] * v[s, w[k,n]]
+
+    with operand signs folded into the uint8-indexed gather tables. The
+    GEMM runs in float32 (the fast dense path) and is provably bit-exact:
+    every partial sum is an integer below 2^24 as long as K <= k_exact_f32;
+    longer contractions are split into K-chunks whose float32 results are
+    exact integers, then accumulated in int32.
+    """
+    fac = factorlib.factorize(cfg.multiplier)
+    u_tbl, v_tbl = _rank1_tables_f32(cfg.multiplier)
+    m, k = x_q.shape
+    n = w_q.shape[1]
+    r = fac.R
+    out = int8_matmul(x_q, w_q)
+    ix = x_q.astype(jnp.uint8).astype(jnp.int32)
+    iw = w_q.astype(jnp.uint8).astype(jnp.int32)
+    xf = jnp.take(u_tbl, ix, axis=0)            # (m, k, R) f32
+    wf = jnp.take(v_tbl, iw, axis=1)            # (R, k, n) f32
+    kc = fac.k_exact_f32
+    if k <= kc:
+        corr = jax.lax.dot_general(
+            xf, wf, (((1, 2), (1, 0)), ((), ())),
+            preferred_element_type=jnp.float32).astype(jnp.int32)
+    else:
+        chunks = -(-k // kc)
+        pad = chunks * kc - k
+        xf = jnp.pad(xf, ((0, 0), (0, pad), (0, 0)))
+        wf = jnp.pad(wf, ((0, 0), (0, pad), (0, 0)))
+        xf = xf.reshape(m, chunks, kc, r)
+        wf = wf.reshape(r, chunks, kc, n)
+        per_chunk = jax.lax.dot_general(
+            xf, wf, (((2, 3), (2, 0)), ((1,), (1,))),
+            preferred_element_type=jnp.float32)      # (chunks, m, n)
+        corr = per_chunk.astype(jnp.int32).sum(axis=0)
+    return out - corr
 
 
 # ---------------------------------------------------------------------------
@@ -319,6 +411,16 @@ def _stage1_pallas_fused(x_q, w_q, cfg, scale, bias, relu):
     return kops.stage1_matmul_fused(x_q, w_q, cfg, scale, bias, relu)
 
 
+def _rank1_pallas(x_q, w_q, cfg: QuantConfig) -> jax.Array:
+    from repro.kernels import ops as kops
+    return kops.rank1_matmul(x_q, w_q, cfg)
+
+
+def _rank1_pallas_fused(x_q, w_q, cfg, scale, bias, relu):
+    from repro.kernels import ops as kops
+    return kops.rank1_matmul_fused(x_q, w_q, cfg, scale, bias, relu)
+
+
 register_backend("int8_exact", lambda x, w, cfg: int8_matmul(x, w),
                  note="W8A8 exact integer products (MXU-native)")
 register_backend("approx_lut", approx_matmul_lut,
@@ -331,6 +433,10 @@ register_backend("approx_stage1", approx_matmul_stage1,
 register_backend("approx_stage1_fused", approx_matmul_stage1_fused,
                  oracle="approx_stage1",
                  note="stage-1 re-approximation in 4 matmuls")
+register_backend("approx_rank1", approx_matmul_rank1,
+                 oracle="approx_lut",
+                 note="exact int8 dot + rank-factored correction GEMM "
+                      "(MXU-shaped, f32-exact, no deficit planes)")
 register_backend("approx_deficit_pallas", _deficit_pallas,
                  fused=_deficit_pallas_fused, oracle="approx_lut",
                  note="Pallas deficit kernel + fused dequant/bias/ReLU "
@@ -338,6 +444,10 @@ register_backend("approx_deficit_pallas", _deficit_pallas,
 register_backend("approx_stage1_pallas", _stage1_pallas,
                  fused=_stage1_pallas_fused, oracle="approx_stage1",
                  note="Pallas stage-1 kernel + fused epilogue")
+register_backend("approx_rank1_pallas", _rank1_pallas,
+                 fused=_rank1_pallas_fused, oracle="approx_lut",
+                 note="Pallas rank-factored kernel (int8 digit-plane "
+                      "correction dots) + fused epilogue")
 
 
 def _resolve_backend(cfg: QuantConfig) -> Backend:

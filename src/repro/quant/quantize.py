@@ -30,9 +30,14 @@ class QuantConfig:
       'approx_stage1'         beyond-paper: exact MXU matmul minus stage-1
                               rank-1 corrections (cheaper re-approximation)
       'approx_stage1_fused'   bit-identical to approx_stage1, 4 matmuls
+      'approx_rank1'          bit-identical to approx_lut via the exact
+                              rank-factored correction GEMM (MXU-shaped,
+                              no element-wise deficit work; docs/kernels.md)
       'approx_deficit_pallas' Pallas kernel, bit-identical to approx_lut;
                               fused dequant/bias/ReLU epilogue + batching
       'approx_stage1_pallas'  Pallas stage-1 kernel, fused epilogue
+      'approx_rank1_pallas'   Pallas rank-factored kernel (int8 digit-plane
+                              correction dots), fused epilogue
 
     fuse_epilogue: let backends with an in-kernel epilogue run dequant,
     bias add and activation fused (set False to force the unfused
@@ -82,8 +87,10 @@ INT8 = QuantConfig(backend="int8_exact")
 APPROX_LUT = QuantConfig(backend="approx_lut")
 APPROX_DEFICIT = QuantConfig(backend="approx_deficit")
 APPROX_STAGE1 = QuantConfig(backend="approx_stage1")
+APPROX_RANK1 = QuantConfig(backend="approx_rank1")
 APPROX_DEFICIT_PALLAS = QuantConfig(backend="approx_deficit_pallas")
 APPROX_STAGE1_PALLAS = QuantConfig(backend="approx_stage1_pallas")
+APPROX_RANK1_PALLAS = QuantConfig(backend="approx_rank1_pallas")
 
 
 def abs_max_scale(x: jax.Array, axis=None, keepdims=True) -> jax.Array:

@@ -17,6 +17,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import compressors as C
+from repro.core import factor as F
+from repro.core import luts
+from repro.core.multiplier import MultiplierConfig, exhaustive_products
 from repro.kernels.approx_matmul import approx_matmul_pallas
 from repro.quant.quantize import QuantConfig
 from repro.quant import matmul as QM
@@ -89,6 +93,106 @@ def test_integer_matmul_routes_through_registry():
     a = QM.integer_matmul(x, w, QuantConfig(backend="approx_deficit_pallas"))
     b = QM.integer_matmul(x, w, QuantConfig(backend="approx_lut"))
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# -- rank-factored correction backends (core/factor.py) ---------------------
+
+ALL_DESIGNS = sorted(C.DESIGNS)
+
+_SVALS = np.concatenate([np.arange(128), np.arange(128) - 128])  # int8 order
+
+
+def _gate_oracle_signed(design: str) -> np.ndarray:
+    """(256, 256) signed products of the gate-level multiplier for every
+    int8 operand pair, indexed by the uint8 cast of the operands."""
+    cfg = MultiplierConfig(name=f"proposed[{design}]", compressor=design,
+                           structure="proposed")
+    return np.asarray(luts.signed_product_lut(cfg))
+
+
+@pytest.mark.parametrize("design", ALL_DESIGNS)
+def test_factorization_bit_exact_over_full_domain(design):
+    """U @ V == (a*b - gate-level approx) over ALL 2^16 unsigned operand
+    pairs, per design — the skeleton decomposition is exact, not fitted."""
+    fac = F.factorize(design, "full")
+    exact = np.arange(256, dtype=np.int64)[:, None] * np.arange(256)[None, :]
+    gate = exhaustive_products(MultiplierConfig(
+        name=f"proposed[{design}]", compressor=design, structure="proposed"))
+    err = exact - gate
+    rec = fac.U.astype(np.int64) @ fac.V.astype(np.int64)
+    np.testing.assert_array_equal(rec, err, err_msg=design)
+    assert fac.rank <= fac.R
+
+
+@pytest.mark.parametrize("design", ALL_DESIGNS)
+def test_rank1_backend_exhaustive_signed_domain(design):
+    """approx_rank1 == gate-level oracle over all 2^16 signed int8 operand
+    pairs (k=1 outer product covers every pair, including -128)."""
+    x = jnp.asarray(_SVALS.astype(np.int8).reshape(-1, 1))
+    w = jnp.asarray(_SVALS.astype(np.int8).reshape(1, -1))
+    cfg = QuantConfig(backend="approx_rank1", multiplier=design)
+    got = np.asarray(QM.get_backend("approx_rank1").fn(x, w, cfg))
+    want = _gate_oracle_signed(design)[
+        np.ix_(_SVALS & 0xFF, _SVALS & 0xFF)]
+    np.testing.assert_array_equal(got, want, err_msg=design)
+
+
+@pytest.mark.parametrize("design", ALL_DESIGNS)
+def test_rank1_pallas_exhaustive_signed_domain(design):
+    x = jnp.asarray(_SVALS.astype(np.int8).reshape(-1, 1))
+    w = jnp.asarray(_SVALS.astype(np.int8).reshape(1, -1))
+    cfg = QuantConfig(backend="approx_rank1_pallas", multiplier=design)
+    got = np.asarray(QM.get_backend("approx_rank1_pallas").fn(x, w, cfg))
+    want = _gate_oracle_signed(design)[
+        np.ix_(_SVALS & 0xFF, _SVALS & 0xFF)]
+    np.testing.assert_array_equal(got, want, err_msg=design)
+
+
+@pytest.mark.parametrize("block", [(8, 8, 8), (16, 8, 16), (8, 16, 8)])
+def test_rank1_pallas_block_sweep(block):
+    """Tile seams (m/n/k grid steps with digit-plane recomposition in the
+    int32 accumulator) are implementation detail: all bit-identical."""
+    from repro.kernels.approx_matmul import rank1_matmul_pallas
+    x, w = _rand_q(19, 21), _rand_q(21, 13)
+    cfg = QuantConfig(backend="approx_lut")
+    want = QM.get_backend("approx_lut").fn(x, w, cfg)
+    got = rank1_matmul_pallas(x, w, block=block, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("design", ["proposed", "design12"])
+def test_rank1_chunked_k_exceeds_f32_bound(design):
+    """K past k_exact_f32 exercises the chunked-GEMM path; results stay
+    bit-identical (design12's bound is small: every chunk seam is hit)."""
+    fac = F.factorize(design)
+    k = fac.k_exact_f32 + 37
+    x, w = _rand_q(4, k), _rand_q(k, 6)
+    cfg = QuantConfig(backend="approx_rank1", multiplier=design)
+    got = QM.get_backend("approx_rank1").fn(x, w, cfg)
+    want = QM.get_backend("approx_lut").fn(
+        x, w, dataclasses.replace(cfg, backend="approx_lut"))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_rank1_stage1_terms_are_rank_one_for_proposed():
+    """The proposed compressor's stage-1 deficit is the single all-ones
+    monomial: exactly one rank-1 term per site (7 on the full domain, 2
+    survive the int8 magnitude domain — bit 7 kills the rest)."""
+    full = F.stage1_terms("proposed", max_mag=255)
+    assert len(full) == 7
+    assert all(t.coeff == 1 for t in full)
+    assert {(t.col, t.a_mask, t.b_mask) for t in full} == {
+        (c, 0b1111 << ra, sum(1 << (c - ra - t) for t in range(4)))
+        for c, ra, rb in F.STAGE1_SITES}
+    int8_dom = F.stage1_terms("proposed", max_mag=128)
+    assert len(int8_dom) == 2
+
+
+def test_rank1_info_reports_factor_complexity():
+    info = QM.rank1_info("proposed")
+    assert info["R"] == 49 and info["rank"] == 43
+    assert info["digits"] == 2 and info["stage1_terms"] == 2
+    assert info["k_exact_f32"] >= 1024  # LM-scale contractions un-chunked
 
 
 # -- (b) fused epilogue == unfused composition ------------------------------

@@ -1,0 +1,133 @@
+"""Unit coverage for the bench regression gate (scripts/bench_gate.py):
+row extraction, threshold/floor semantics, and the --use comparison path
+against a synthetic baseline — no real benchmark run."""
+import importlib.util
+import json
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+
+spec = importlib.util.spec_from_file_location(
+    "bench_gate", ROOT / "scripts" / "bench_gate.py")
+bench_gate = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(bench_gate)
+
+
+def _results(us_exact, us_deficit):
+    return {"kernels": [
+        {"backend": "int8_exact", "m": 256, "k": 256, "n": 256,
+         "us_per_call": us_exact},
+        {"backend": "approx_deficit", "m": 256, "k": 256, "n": 256,
+         "us_per_call": us_deficit},
+        {"backend": "note_row", "m": 0, "k": 0, "n": 0,
+         "us_per_call": 0.0},           # untimed rows are ignored
+    ]}
+
+
+def test_rows_extraction_filters_untimed_and_suites():
+    rows = bench_gate._rows({**_results(1000.0, 40000.0),
+                             "serve": [{"backend": "x",
+                                        "us_per_call": 5.0}]},
+                            only={"kernels"})
+    assert ("kernels", "int8_exact", 256, 256, 256) in rows
+    assert all(k[0] == "kernels" for k in rows)
+    assert not any(k[1] == "note_row" for k in rows)
+
+
+@pytest.mark.parametrize("new_deficit,rc", [
+    (41000.0, 0),      # within 1.5x
+    (90000.0, 1),      # >1.5x normalized -> regression
+])
+def test_gate_use_dir_threshold(tmp_path, monkeypatch, new_deficit, rc):
+    baseline = tmp_path / "baseline.json"
+    baseline.write_text(json.dumps(_results(1000.0, 40000.0)))
+    monkeypatch.setattr(bench_gate, "BASELINE", baseline)
+    use = tmp_path / "fresh"
+    use.mkdir()
+    (use / "bench_results.json").write_text(
+        json.dumps(_results(1100.0, new_deficit)))
+    assert bench_gate.main(["--only", "kernels", "--use", str(use)]) == rc
+
+
+def test_gate_never_fails_rows_without_exact_base(tmp_path, monkeypatch):
+    # illustration rows (no int8_exact at their shape) drift 3x on a
+    # slower machine: reported, but not a gated failure
+    base = {"kernels": [
+        {"backend": "int8_exact", "m": 256, "k": 256, "n": 256,
+         "us_per_call": 1000.0},
+        {"backend": "approx_lut_eager_legacy", "m": 16, "k": 128, "n": 32,
+         "us_per_call": 58000.0}]}
+    fresh = {"kernels": [
+        {"backend": "int8_exact", "m": 256, "k": 256, "n": 256,
+         "us_per_call": 1000.0},
+        {"backend": "approx_lut_eager_legacy", "m": 16, "k": 128, "n": 32,
+         "us_per_call": 174000.0}]}
+    baseline = tmp_path / "baseline.json"
+    baseline.write_text(json.dumps(base))
+    monkeypatch.setattr(bench_gate, "BASELINE", baseline)
+    use = tmp_path / "fresh"
+    use.mkdir()
+    (use / "bench_results.json").write_text(json.dumps(fresh))
+    args = ["--only", "kernels", "--use", str(use)]
+    assert bench_gate.main(args) == 0
+    assert bench_gate.main(args + ["--absolute"]) == 1
+
+
+def test_gate_normalizes_by_same_shape_exact(tmp_path, monkeypatch):
+    # a uniformly 3x slower machine: every wall-time tripled, slowdown
+    # ratios unchanged -> not a regression (but --absolute flags it)
+    baseline = tmp_path / "baseline.json"
+    baseline.write_text(json.dumps(_results(1000.0, 40000.0)))
+    monkeypatch.setattr(bench_gate, "BASELINE", baseline)
+    use = tmp_path / "fresh"
+    use.mkdir()
+    (use / "bench_results.json").write_text(
+        json.dumps(_results(3000.0, 120000.0)))
+    args = ["--only", "kernels", "--use", str(use)]
+    assert bench_gate.main(args) == 0
+    assert bench_gate.main(args + ["--absolute"]) == 1
+
+
+def test_gate_fails_on_missing_row_forgives_unswept_shape(tmp_path,
+                                                          monkeypatch):
+    base = _results(1000.0, 40000.0)
+    base["kernels"].append({"backend": "int8_exact", "m": 2048, "k": 2048,
+                            "n": 2048, "us_per_call": 9e5})
+    baseline = tmp_path / "baseline.json"
+    baseline.write_text(json.dumps(base))
+    monkeypatch.setattr(bench_gate, "BASELINE", baseline)
+    use = tmp_path / "fresh"
+    use.mkdir()
+    # quick run: no 2048 rows at all -> sweep-level difference, forgiven
+    (use / "bench_results.json").write_text(
+        json.dumps(_results(1000.0, 41000.0)))
+    assert bench_gate.main(["--only", "kernels", "--use", str(use)]) == 0
+    # but dropping one backend at a shape the run DID sweep is gated
+    (use / "bench_results.json").write_text(json.dumps(
+        {"kernels": [r for r in base["kernels"]
+                     if r["backend"] == "int8_exact"]}))
+    assert bench_gate.main(["--only", "kernels", "--use", str(use)]) == 1
+
+
+def test_gate_missing_baseline_is_error(tmp_path, monkeypatch):
+    monkeypatch.setattr(bench_gate, "BASELINE", tmp_path / "nope.json")
+    assert bench_gate.main(["--only", "kernels"]) == 2
+
+
+def test_committed_baseline_has_the_acceptance_rows():
+    # the artifact the issue's acceptance criterion points at: rank1 and
+    # deficit timed at 256^3 in the committed baseline + versioned artifact
+    base = json.loads((ROOT / "experiments" /
+                       "bench_results.json").read_text())
+    rows = {r["backend"]: r for r in base["kernels"]
+            if r.get("m") == 256 and r.get("us_per_call")}
+    assert "approx_rank1" in rows and "approx_deficit" in rows
+    assert rows["approx_rank1"]["corr_rank"] == 49
+    art = json.loads((ROOT / "experiments" /
+                      "bench_kernels.json").read_text())
+    assert art["suite"] == "bench_kernels"
+    backends = {r["backend"] for r in art["tables"]["kernel_perf"]}
+    assert {"approx_rank1", "approx_deficit",
+            "approx_lut_eager_cached"} <= backends
