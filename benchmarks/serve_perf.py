@@ -1,15 +1,23 @@
 """Serving throughput: continuous batching vs the batch-synchronous
-baseline, swept over offered load.
+baseline, plus the prefix-cache hit-rate sweep.
 
-Both policies are the SAME engine (`repro.serve.Engine`) with the same
-compiled prefill/decode (`compiled_fns` is lru-cached on the config), so
-the tok/s gap is pure scheduling: 'drain' admits a wave and leaves slots
-idle until the slowest request of the wave finishes; 'continuous' refills
-freed slots mid-decode. On a mixed-length workload continuous batching
-must therefore meet or beat the baseline — the acceptance check this
-benchmark records into ``experiments/bench_serve.json`` (same versioned
+Two sweeps, both into ``experiments/bench_serve.json`` (same versioned
 artifact schema as the eval suites; wall-times are CPU reference numbers,
-``*_pallas`` backends run in interpret mode off-TPU).
+``*_pallas`` backends run in interpret mode off-TPU):
+
+  scheduling   'drain' vs 'continuous' over offered load, prefix caching
+               OFF — both policies are the SAME engine with the same
+               compiled prefill/decode, so the tok/s gap is pure
+               scheduling: drain leaves slots idle until the slowest
+               request of a wave finishes, continuous refills freed slots
+               mid-decode. At loaded points continuous must meet or beat
+               drain.
+  cached       caching ON, swept over the shared-prefix fraction of the
+               prompt. As the share grows, admissions gather more pages
+               from the radix cache and prefill only the suffix — the
+               acceptance check is prefill_tokens (and prefill count)
+               dropping monotonically-ish with share while us_per_call
+               stays flat (cache bookkeeping must not tax the decode loop).
 
 Run directly (CI serve-smoke job):
     PYTHONPATH=src:. python benchmarks/serve_perf.py --smoke
@@ -28,6 +36,8 @@ import numpy as np
 
 OUT = Path(__file__).resolve().parent.parent / "experiments"
 
+PAGE = 8               # engine default page_size — share steps are page-sized
+
 
 def _workload(n_req: int, vocab: int, seed: int):
     """Mixed prompt lengths AND budgets: the heterogeneity that makes the
@@ -39,32 +49,59 @@ def _workload(n_req: int, vocab: int, seed: int):
              int(news[rid])) for rid in range(n_req)]
 
 
-def _serve(cfg, params, reqs, policy: str, slots: int,
-           max_len: int) -> Dict:
+def _prefix_workload(n_req: int, vocab: int, seed: int, share: float,
+                     plen: int = 32):
+    """Fixed-length prompts whose leading ``share`` fraction (rounded to
+    whole pages) is common to every request — total prompt tokens are
+    constant across shares, so prefill_tokens isolates what the cache
+    absorbed."""
+    rng = np.random.default_rng(seed)
+    shared_len = min(int(round(share * plen / PAGE)) * PAGE, plen)
+    shared = rng.integers(0, vocab, shared_len).astype(np.int32)
+    news = rng.integers(3, 9, n_req)
+    return [(rid,
+             np.concatenate([shared,
+                             rng.integers(0, vocab, plen - shared_len)
+                             .astype(np.int32)]),
+             int(news[rid])) for rid in range(n_req)]
+
+
+def _serve(cfg, params, reqs, policy: str, slots: int, max_len: int,
+           prefix_caching: bool = False) -> Dict:
     from repro.serve import Engine, ServeRequest
     eng = Engine(cfg, params, slots=slots, max_len=max_len,
-                 admission=policy)
+                 admission=policy, prefix_caching=prefix_caching)
     for rid, prompt, max_new in reqs:
         eng.submit(ServeRequest(rid=rid, prompt=prompt, max_new=max_new))
     return eng.run()
+
+
+def _us_per_call(st: Dict) -> float:
+    """Wall-time per decode step — the gate-checked rate (per step, not per
+    token: a step is one fixed-shape batched call, so this is the number
+    that must not regress when paging bookkeeping is added)."""
+    return st["elapsed_s"] / max(st["decode_steps"], 1) * 1e6
 
 
 def run(quick: bool = True) -> List[Dict]:
     from repro.eval import lm as LM
     from repro.models import transformer_lm as TLM
     from repro.quant.quantize import for_lm
+    from repro.serve import clear_compiled_fns
 
     cfg0 = LM.arch(smoke=quick)
     params = TLM.init(cfg0, jax.random.PRNGKey(0))
     if quick:
-        slots, max_len = 4, 40
+        slots, max_len = 4, 48
         backends = ("bf16", "approx_deficit")
         loads = (slots, 4 * slots)
+        shares = (0.0, 0.5, 1.0)
     else:
         slots, max_len = 4, 64
         backends = ("bf16", "int8_exact", "approx_deficit",
                     "approx_stage1_fused")
         loads = (slots, 2 * slots, 4 * slots, 8 * slots)
+        shares = (0.0, 0.25, 0.5, 0.75, 1.0)
 
     rows: List[Dict] = []
     for backend in backends:
@@ -72,6 +109,9 @@ def run(quick: bool = True) -> List[Dict]:
         # warm the shared jit cache so neither policy pays compile time
         _serve(cfg, params, _workload(2, cfg0.vocab, 99), "continuous",
                slots, max_len)
+
+        # -- scheduling sweep: caching OFF, so the drain/continuous ratio
+        #    is admission policy alone ---------------------------------
         for offered in loads:
             reqs = _workload(offered, cfg0.vocab, seed=offered)
             drain_tps = None
@@ -81,11 +121,12 @@ def run(quick: bool = True) -> List[Dict]:
                 st = max((_serve(cfg, params, reqs, policy, slots, max_len)
                           for _ in range(2)), key=lambda s: s["tok_per_s"])
                 row = {"backend": backend, "policy": policy,
-                       "offered": offered, "slots": slots,
+                       "offered": offered, "slots": slots, "share": -1.0,
                        "requests": st["requests"],
                        "new_tokens": st["new_tokens"],
                        "decode_steps": st["decode_steps"],
                        "tok_per_s": round(st["tok_per_s"], 2),
+                       "us_per_call": round(_us_per_call(st), 2),
                        "ttft_ms_mean": round(st["ttft_ms_mean"], 2),
                        "occupancy": round(st["occupancy"], 4)}
                 if policy == "drain":
@@ -99,6 +140,36 @@ def run(quick: bool = True) -> List[Dict]:
                       f"offered={offered:3d} {row['tok_per_s']:8.1f} tok/s "
                       f"occ={row['occupancy']:.2f} "
                       f"x{row['speedup_vs_drain']:.2f}")
+
+        # -- cached sweep: caching ON, shared-prefix fraction swept ------
+        offered = max(loads)
+        for share in shares:
+            reqs = _prefix_workload(offered, cfg0.vocab,
+                                    seed=1000 + int(share * 4), share=share)
+            st = max((_serve(cfg, params, reqs, "continuous", slots,
+                             max_len, prefix_caching=True)
+                      for _ in range(2)), key=lambda s: s["tok_per_s"])
+            rows.append({"backend": backend, "policy": "cached",
+                         "offered": offered, "slots": slots,
+                         "share": share,
+                         "requests": st["requests"],
+                         "new_tokens": st["new_tokens"],
+                         "decode_steps": st["decode_steps"],
+                         "prefills": st["prefills"],
+                         "prefill_tokens": st["prefill_tokens"],
+                         "prefix_hit_tokens": st["prefix_hit_tokens"],
+                         "hit_rate": round(st["prefix_hit_rate"], 4),
+                         "tok_per_s": round(st["tok_per_s"], 2),
+                         "us_per_call": round(_us_per_call(st), 2),
+                         "occupancy": round(st["occupancy"], 4)})
+            print(f"serve_perf: {backend:16s} cached     "
+                  f"share={share:.2f} hit={st['prefix_hit_rate']:.2f} "
+                  f"prefill_tok={st['prefill_tokens']:4d} "
+                  f"{st['tok_per_s']:8.1f} tok/s")
+        # drop this backend's executables before the next one compiles —
+        # the engine cache is bounded (maxsize=8) but there is no reason
+        # to carry dead configs through a sweep
+        clear_compiled_fns()
     return rows
 
 
@@ -110,9 +181,10 @@ def artifact(rows: List[Dict], quick: bool) -> Dict:
         "bench_serve", {"serve_perf": rows},
         {"smoke": bool(quick), "seed": 0,
          "jax_backend": jax.default_backend(),
-         "act_scale": "per_token",
-         "note": "CPU reference wall-times; same compiled prefill/decode "
-                 "for both policies — tok/s gap is scheduling only"})
+         "act_scale": "per_token", "page_size": PAGE,
+         "note": "CPU reference wall-times; scheduling rows run with "
+                 "prefix caching off (policy-only gap), cached rows sweep "
+                 "the shared-prefix fraction with caching on"})
 
 
 def loaded_points(rows: List[Dict]) -> List[Dict]:
@@ -123,20 +195,34 @@ def loaded_points(rows: List[Dict]) -> List[Dict]:
             and r["offered"] > r["slots"]]
 
 
+def cached_points(rows: List[Dict]) -> List[Dict]:
+    return [r for r in rows if r["policy"] == "cached"]
+
+
 def summarize(rows: List[Dict]) -> str:
-    """Headline: at loaded points continuous must be >= the drain
-    baseline."""
+    """Headlines: continuous >= drain at loaded points, and prefill work
+    falling as the shared-prefix fraction rises."""
     loaded = loaded_points(rows)
     worst = min(r["speedup_vs_drain"] for r in loaded)
     mean = sum(r["speedup_vs_drain"] for r in loaded) / len(loaded)
-    return (f"continuous vs drain at offered>slots: mean x{mean:.2f}, "
-            f"worst x{worst:.2f} over {len(loaded)} (backend, load) points")
+    lines = [f"continuous vs drain at offered>slots: mean x{mean:.2f}, "
+             f"worst x{worst:.2f} over {len(loaded)} (backend, load) points"]
+    cached = cached_points(rows)
+    if cached:
+        lo = min(r["share"] for r in cached)
+        hi = max(r["share"] for r in cached)
+        cold = sum(r["prefill_tokens"] for r in cached if r["share"] == lo)
+        warm = sum(r["prefill_tokens"] for r in cached if r["share"] == hi)
+        hit = max(r["hit_rate"] for r in cached)
+        lines.append(f"prefix cache at share {lo:.2f}->{hi:.2f}: prefill "
+                     f"tokens {cold}->{warm}, peak hit rate {hit:.2f}")
+    return "\n".join(lines)
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="~30 s CPU budget (CI serve-smoke job)")
+                    help="~60 s CPU budget (CI serve-smoke job)")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
     quick = not args.full

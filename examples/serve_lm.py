@@ -35,6 +35,12 @@ ap.add_argument("--sampling", default="greedy",
 ap.add_argument("--temperature", type=float, default=0.8)
 ap.add_argument("--top-k", type=int, default=8)
 ap.add_argument("--seed", type=int, default=0)
+ap.add_argument("--shared-prefix", type=int, default=0,
+                help="prepend a common prefix of this many tokens to every "
+                     "prompt (shared-system-prompt traffic: requests after "
+                     "the first retirement hit the paged prefix cache)")
+ap.add_argument("--no-prefix-cache", action="store_true",
+                help="disable the paged KV prefix cache")
 ap.add_argument("--stream", action="store_true",
                 help="print tokens as they are emitted")
 args = ap.parse_args()
@@ -47,12 +53,16 @@ scfg = SamplingConfig(kind=args.sampling, temperature=args.temperature,
 stream = ((lambda rid, tok: print(f"  rid {rid} -> {tok}"))
           if args.stream else None)
 eng = Engine(cfg, params, slots=args.slots, max_len=64,
-             admission=args.policy, stream=stream)
+             admission=args.policy, stream=stream,
+             prefix_caching=not args.no_prefix_cache)
 rng = np.random.default_rng(args.seed)
+shared = rng.integers(0, cfg.vocab, args.shared_prefix).astype(np.int32)
 for rid in range(args.requests):
     plen = int(rng.integers(4, 17))          # mixed-length workload
+    prompt = np.concatenate(
+        [shared, rng.integers(0, cfg.vocab, plen).astype(np.int32)])
     eng.submit(ServeRequest(
-        rid=rid, prompt=rng.integers(0, cfg.vocab, plen).astype(np.int32),
+        rid=rid, prompt=prompt,
         max_new=int(rng.integers(min(4, args.max_new), args.max_new + 1)),
         sampling=scfg))
 stats = eng.run()
@@ -65,4 +75,8 @@ print(f"backend={args.backend} policy={args.policy}: "
       f"{stats['requests']} requests in {stats['decode_steps']} decode "
       f"steps / {stats['waves']} admission waves, {stats['new_tokens']} "
       f"tokens, {stats['tok_per_s']:.1f} tok/s, "
-      f"occupancy {stats['occupancy']:.2f}")
+      f"occupancy {stats['occupancy']:.2f}, "
+      f"prefix hit rate {stats['prefix_hit_rate']:.2f} "
+      f"({stats['prefix_hit_tokens']} of "
+      f"{stats['prefix_hit_tokens'] + stats['prefill_tokens']} prompt "
+      f"tokens from cache)")

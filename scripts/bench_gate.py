@@ -42,8 +42,18 @@ BASELINE = ROOT / "experiments" / "bench_results.json"
 ARTIFACTS = ("bench_kernels.json", "bench_lm.json", "bench_serve.json")
 
 
+# per-suite base backend for normalization: serve rows have no int8_exact
+# point in the quick sweep, but every (policy, offered, share) cell has a
+# bf16 row
+BASE_BACKEND = {"serve": "bf16"}
+DEFAULT_BASE = "int8_exact"
+
+
 def _rows(results: dict, only: set | None):
-    """(suite, backend, m, k, n) -> us_per_call for every timed row."""
+    """(suite, backend, m, k, n, policy, offered, share) -> us_per_call
+    for every timed row. Kernel rows carry shape in (m, k, n); serve rows
+    carry their sweep point in (policy, offered, share) — unused
+    components sit at their defaults so kernel keys are unchanged."""
     out = {}
     for suite, rows in results.items():
         if only and suite not in only:
@@ -55,28 +65,30 @@ def _rows(results: dict, only: set | None):
             if not isinstance(us, (int, float)) or us <= 0:
                 continue
             key = (suite, row.get("backend", row.get("name", "?")),
-                   row.get("m", 0), row.get("k", 0), row.get("n", 0))
+                   row.get("m", 0), row.get("k", 0), row.get("n", 0),
+                   row.get("policy", ""), row.get("offered", 0),
+                   row.get("share", -1))
             out[key] = float(us)
     return out
 
 
 def _normalized(rows: dict, absolute: bool):
-    """(values, gated_keys): us_per_call scaled by the same run's
-    int8_exact at the same shape (a machine-independent slowdown).
+    """(values, gated_keys): us_per_call scaled by the same run's base
+    backend (int8_exact for kernels, bf16 for serve) at the same
+    shape/sweep point (a machine-independent slowdown).
 
-    Rows at shapes with no exact base (e.g. the eager-staging
+    Rows at shapes with no base row (e.g. the eager-staging
     illustration rows) keep raw wall-times and are excluded from
     `gated_keys` — raw cross-machine comparisons would make CI flaky —
     unless `absolute`, which gates everything raw. The trade-off of
-    normalized mode: a regression in int8_exact itself (ratio always
-    1.0) or one exactly proportional to it is invisible; run with
+    normalized mode: a regression in the base backend itself (ratio
+    always 1.0) or one exactly proportional to it is invisible; run with
     --absolute on stable hardware to audit that blind spot.
     """
     if absolute:
         return dict(rows), set(rows)
-    base = {(suite, m, k, n): us
-            for (suite, name, m, k, n), us in rows.items()
-            if name == "int8_exact"}
+    base = {(key[0],) + key[2:]: us for key, us in rows.items()
+            if key[1] == BASE_BACKEND.get(key[0], DEFAULT_BASE)}
     values = {key: us / base.get((key[0],) + key[2:], 1.0)
               for key, us in rows.items()}
     gated = {key for key in rows if (key[0],) + key[2:] in base}

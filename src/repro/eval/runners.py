@@ -268,20 +268,23 @@ SUITES: Dict[str, Suite] = {
             "(beyond paper)",
             (("backend", "backend", None), ("requests", "requests", None),
              ("new_tokens", "new tokens", None),
+             ("hit_rate", "prefix hit rate", ".3f"),
              ("solo_match", "solo == batched", None),
              ("match_bf16", "tokens == bf16 %", ".2f"),
              ("prefix_bf16", "shared prefix (tok)", ".2f")),
-            "Mixed-length workload (more requests than slots; the last "
-            "request is admitted mid-decode into a reused slot) served by "
-            "the continuous-batching engine (repro.serve) under every "
-            "backend with per-token activation scales. `solo == batched` "
-            "is the engine's bitwise batching-invariance contract "
-            "(exhaustive per-backend proof in tests/test_serve.py); the "
-            "bf16 columns measure where approximate accumulators first "
-            "flip a greedy argmax. Params are random-init — this scores "
-            "the serving path, not task quality (see suite `lm`). "
-            "Throughput lives in benchmarks/serve_perf.py -> "
-            "experiments/bench_serve.json.")},
+            "Mixed-length workload behind a shared system prefix (more "
+            "requests than slots; the last request is admitted mid-decode "
+            "into a reused slot on a prefix-cache hit) served by the "
+            "continuous-batching engine (repro.serve) under every backend "
+            "with per-token activation scales. `prefix hit rate` is the "
+            "fraction of prompt tokens gathered from the paged KV cache "
+            "instead of prefilled; `solo == batched` is the engine's "
+            "bitwise batching + cache-hit invariance contract (exhaustive "
+            "per-backend proof in tests/test_serve.py); the bf16 columns "
+            "measure where approximate accumulators first flip a greedy "
+            "argmax. Params are random-init — this scores the serving "
+            "path, not task quality (see suite `lm`). Throughput lives in "
+            "benchmarks/serve_perf.py -> experiments/bench_serve.json.")},
         doc="continuous-batching serving parity backend sweep"),
 }
 

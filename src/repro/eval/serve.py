@@ -1,19 +1,25 @@
 """Serve suite — backend-vs-bf16 output parity under mixed continuous
-batching (repro.serve).
+batching with prefix caching (repro.serve).
 
 The LM suite scores teacher-forced quality; this suite scores the *serving
 path*: every registered backend drives the continuous-batching engine on a
 mixed-length workload (more requests than slots, so the tail is admitted
-mid-decode into reused slots) and is compared against the bf16 reference
-serve of the identical workload.
+mid-decode into reused slots; every prompt opens with a shared system
+prefix, so late admissions are prefix-cache hits) and is compared against
+the bf16 reference serve of the identical workload.
 
 Reported per backend:
 
   solo_match   True iff the probe request (the one admitted mid-decode into
-               a reused slot) decodes bitwise-identical tokens when served
-               alone — the engine's batching-invariance contract, proved
-               exhaustively per backend in tests/test_serve.py and spot-
-               checked here inside the artifact trail
+               a reused slot, on a prefix-cache hit) decodes
+               bitwise-identical tokens when served alone on a cold engine
+               — the engine's batching + prefix-cache invariance contract,
+               proved exhaustively per backend in tests/test_serve.py and
+               spot-checked here inside the artifact trail
+  hit_rate     fraction of prompt tokens served from the paged prefix
+               cache instead of prefilled (identical across backends by
+               construction — the radix tree is keyed on token ids, and
+               greedy tokens only diverge per backend *after* admission)
   match_bf16   % of decoded tokens equal to the bf16 serve (greedy)
   prefix_bf16  mean shared-prefix length with the bf16 serve — how many
                tokens survive before approximate accumulators flip an
@@ -28,42 +34,53 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Tuple
 
+# one full page (engine default page_size=8) shared by every prompt, so
+# requests admitted after the first retirement hit the prefix cache
+SHARED_PREFIX = 8
+
 
 def workload(vocab: int, smoke: bool, seed: int):
-    """Mixed prompt lengths and budgets; more requests than slots so the
-    last request is admitted mid-decode. Returns (requests, slots,
-    max_len) with requests = [(rid, prompt, max_new), ...]."""
+    """Mixed prompt lengths and budgets behind a shared system prefix;
+    more requests than slots so the last request is admitted mid-decode
+    (and, with the prefix already published by a retired request, as a
+    cache hit). Returns (requests, slots, max_len) with requests =
+    [(rid, prompt, max_new), ...]."""
     import numpy as np
     rng = np.random.default_rng(seed + 11)
     if smoke:
-        n_req, slots, max_len = 4, 3, 32
+        n_req, slots, max_len = 4, 3, 48
         lens, news = rng.integers(2, 9, n_req), rng.integers(3, 7, n_req)
     else:
-        n_req, slots, max_len = 8, 4, 96
+        n_req, slots, max_len = 8, 4, 112
         lens, news = rng.integers(4, 25, n_req), rng.integers(8, 17, n_req)
-    reqs = [(rid, rng.integers(0, vocab, int(lens[rid])).astype(np.int32),
+    shared = rng.integers(0, vocab, SHARED_PREFIX).astype(np.int32)
+    reqs = [(rid,
+             np.concatenate([shared, rng.integers(0, vocab, int(lens[rid]))
+                             .astype(np.int32)]),
              int(news[rid])) for rid in range(n_req)]
     return reqs, slots, max_len
 
 
 def serve_outputs(cfg, params, reqs, slots: int,
-                  max_len: int) -> Dict[int, List[int]]:
-    """Serve `reqs` through a continuous engine -> {rid: tokens}."""
+                  max_len: int) -> Tuple[Dict[int, List[int]], Dict]:
+    """Serve `reqs` through a continuous engine -> ({rid: tokens}, stats)."""
     from repro.serve import Engine, ServeRequest
     eng = Engine(cfg, params, slots=slots, max_len=max_len)
     for rid, prompt, max_new in reqs:
         eng.submit(ServeRequest(rid=rid, prompt=prompt, max_new=max_new))
-    eng.run()
-    return {r.rid: list(r.output) for r in eng.completed}
+    stats = eng.run()
+    return {r.rid: list(r.output) for r in eng.completed}, stats
 
 
 def _parity(outs: Dict[int, List[int]],
             ref: Dict[int, List[int]]) -> Tuple[float, float]:
-    """(token match % vs ref, mean shared-prefix length)."""
+    """(token match % vs ref, mean shared-prefix length). Safe on empty
+    inputs — an engine run that produced no tokens scores (0, 0) instead
+    of dividing by zero."""
     total = match = 0
     prefixes = []
     for rid, toks in outs.items():
-        rtoks = ref[rid]
+        rtoks = ref.get(rid, [])
         total += len(rtoks)
         match += sum(a == b for a, b in zip(toks, rtoks))
         p = 0
@@ -72,7 +89,8 @@ def _parity(outs: Dict[int, List[int]],
                 break
             p += 1
         prefixes.append(p)
-    return 100.0 * match / max(total, 1), sum(prefixes) / len(prefixes)
+    return (100.0 * match / max(total, 1),
+            sum(prefixes) / max(len(prefixes), 1))
 
 
 def run(smoke: bool = False, seed: int = 0) -> Dict:
@@ -84,21 +102,29 @@ def run(smoke: bool = False, seed: int = 0) -> Dict:
     from repro.eval.runners import _base_config, sweep_points
     from repro.models import transformer_lm as TLM
     from repro.quant.quantize import for_lm
-    from repro.serve import Engine, ServeRequest
+    from repro.serve import Engine, ServeRequest, clear_compiled_fns
 
     cfg0 = LM.arch(smoke)
     params = TLM.init(cfg0, jax.random.PRNGKey(seed))
     reqs, slots, max_len = workload(cfg0.vocab, smoke, seed)
     probe = reqs[-1]       # admitted mid-decode (n_req > slots)
 
+    # the bf16 reference serve is computed explicitly, NOT inferred from
+    # sweep order — the old code crashed with `_parity(outs, None)` if
+    # sweep_points ever stopped yielding bf16 first
+    ref_cfg = dataclasses.replace(cfg0, quant=for_lm("bf16"))
+    ref, ref_stats = serve_outputs(ref_cfg, params, reqs, slots, max_len)
+
     rows: List[Dict] = []
-    ref = None
     for label, backend, mult in sweep_points(variants=True):
         cfg = dataclasses.replace(cfg0, quant=for_lm(backend, mult))
-        outs = serve_outputs(cfg, params, reqs, slots, max_len)
         if label == "bf16":
-            ref = outs
-        # probe served alone on the same pool shape (bitwise contract)
+            outs, stats = ref, ref_stats
+        else:
+            outs, stats = serve_outputs(cfg, params, reqs, slots, max_len)
+        # probe served alone on a COLD engine with the same pool shape:
+        # in the batched run it was admitted mid-decode onto a prefix-
+        # cache hit, so equality is the hit==miss AND batching contract
         solo_eng = Engine(cfg, params, slots=slots, max_len=max_len)
         solo_eng.submit(ServeRequest(rid=probe[0], prompt=probe[1],
                                      max_new=probe[2]))
@@ -109,14 +135,17 @@ def run(smoke: bool = False, seed: int = 0) -> Dict:
             "backend": label,
             "requests": len(reqs),
             "new_tokens": sum(len(t) for t in outs.values()),
+            "hit_rate": round(stats["prefix_hit_rate"], 3),
             "solo_match": bool(solo == outs[probe[0]]),
             "match_bf16": round(match_pct, 2),
             "prefix_bf16": round(prefix, 2),
         })
+    clear_compiled_fns()   # don't pin this sweep's executables past the suite
 
     config = {**_base_config(smoke, seed), "arch": cfg0.name,
               "n_layers": cfg0.n_layers, "d_model": cfg0.d_model,
               "vocab": cfg0.vocab, "slots": slots, "max_len": max_len,
-              "n_req": len(reqs), "act_scale": "per_token",
+              "n_req": len(reqs), "shared_prefix": SHARED_PREFIX,
+              "act_scale": "per_token",
               "params": "random-init (parity suite)"}
     return artifacts.make_artifact("serve", {"serve": rows}, config)

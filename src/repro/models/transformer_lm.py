@@ -388,7 +388,8 @@ def forward_loss(params, batch, cfg: ArchConfig,
 
 
 def prefill(params, tokens, cfg: ArchConfig, caches,
-            rules: ShardingRules = DEFAULT_RULES, enc=None, lengths=None):
+            rules: ShardingRules = DEFAULT_RULES, enc=None, lengths=None,
+            pos_offset=None):
     """Batched prefill -> (next-token logits (B, 1, V), caches).
 
     lengths: optional (B,) int32 true prompt lengths for a right-padded
@@ -396,9 +397,18 @@ def prefill(params, tokens, cfg: ArchConfig, caches,
     the shared last column (mixed-length serving; the padded tail's KV is
     masked out of later decode steps by absolute position). Without
     `lengths` the batch is assumed unpadded.
+
+    pos_offset: optional int32 scalar (or (B,) vector) absolute position of
+    ``tokens[:, 0]`` — a *suffix* prefill over a cache already holding KV
+    for positions ``[0, pos_offset)``. Queries attend causally to the
+    cached prefix plus the in-flight suffix, exactly as a full prefill
+    would at the same absolute positions; this is what lets the serving
+    engine skip recomputing a prefix-cache hit (docs/serving.md). None (or
+    0) is a cold prefill from position 0.
     """
     x = embed_tokens(params, tokens, cfg)
-    h, caches, _ = backbone(params, x, cfg, rules, caches=caches, pos=None,
+    pos = None if pos_offset is None else jnp.asarray(pos_offset, jnp.int32)
+    h, caches, _ = backbone(params, x, cfg, rules, caches=caches, pos=pos,
                             enc=enc)
     if lengths is not None:
         idx = jnp.asarray(lengths, jnp.int32) - 1
@@ -418,3 +428,64 @@ def decode_step(params, token, pos, cfg: ArchConfig, caches,
     h, caches, _ = backbone(params, x, cfg, rules, caches=caches, pos=pos,
                             enc=enc)
     return lm_logits(params, h, cfg), caches
+
+
+# ---------------------------------------------------------------------------
+# Paged cache indirection (repro.serve page pool — see docs/serving.md)
+# ---------------------------------------------------------------------------
+#
+# A page store is an init_cache pytree with (batch -> n_pages,
+# max_len -> page_size): every positional leaf becomes (rep, n_pages,
+# page_size, ...). Gather/scatter move whole pages between the store and a
+# cache row by page index — static shapes per chain length, so both lower
+# to one take/one scatter per leaf (TPU/Pallas friendly). Only archs whose
+# caches are purely position-indexed are pageable: recurrent SSM states
+# and windowed ring buffers have no per-position storage to page
+# (serve.padded_prefill_ok is the same predicate).
+
+def init_page_store(cfg: ArchConfig, n_pages: int, page_size: int,
+                    dtype=jnp.bfloat16):
+    """KV page store: ``n_pages`` pages of ``page_size`` positions each."""
+    return init_cache(cfg, n_pages, page_size, dtype)
+
+
+def gather_pages(cache, pages, page_ids):
+    """Copy a page chain into positions ``[0, n*page_size)`` of a batch=1
+    cache (the copy-on-write copy: shared pages are read, never written).
+
+    cache: init_cache(cfg, 1, max_len) pytree; pages: init_page_store
+    pytree; page_ids: (n,) int page indices, in position order.
+    """
+    ids = jnp.asarray(page_ids, jnp.int32)
+
+    def leaf(row, pg):
+        sel = jnp.take(pg, ids, axis=1)               # (rep, n, ps, ...)
+        sel = sel.reshape(sel.shape[0], 1,
+                          sel.shape[1] * sel.shape[2], *sel.shape[3:])
+        return jax.lax.dynamic_update_slice_in_dim(
+            row, sel.astype(row.dtype), 0, axis=2)
+
+    return jax.tree.map(leaf, cache, pages)
+
+
+def store_pages(pages, pool, slot: int, page_ids, page_indices):
+    """Freeze pages out of one slot row of a serving pool.
+
+    For each (page_ids[i], page_indices[i]) pair, positions
+    ``[page_indices[i]*ps, (page_indices[i]+1)*ps)`` of ``pool[:, slot]``
+    are copied into page ``page_ids[i]`` of the store. Returns the updated
+    store.
+    """
+    ids = jnp.asarray(page_ids, jnp.int32)
+    idxs = jnp.asarray(page_indices, jnp.int32)
+
+    def leaf(pg, pl):
+        ps = pg.shape[2]
+        row = pl[:, slot]                             # (rep, max_len, ...)
+        n_pos = row.shape[1] // ps
+        segs = row[:, :n_pos * ps].reshape(
+            row.shape[0], n_pos, ps, *row.shape[2:])
+        sel = jnp.take(segs, idxs, axis=1)            # (rep, n, ps, ...)
+        return pg.at[:, ids].set(sel.astype(pg.dtype))
+
+    return jax.tree.map(leaf, pages, pool)

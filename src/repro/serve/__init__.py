@@ -4,14 +4,20 @@ Public surface:
   Engine, ServeRequest, FINISH_REASONS   — the serving loop (engine.py)
   SamplingConfig, GREEDY                 — per-request sampling (sampling.py)
   SlotScheduler                          — admission + slot free-list
-  padded_prefill_ok, compiled_fns        — engine plumbing reused by
-                                           benchmarks and the drain baseline
+  PagePool, PrefixCache                  — refcounted page ids + radix
+                                           prefix cache (paging.py)
+  padded_prefill_ok, compiled_fns,
+  clear_compiled_fns                     — engine plumbing reused by
+                                           benchmarks and the eval runners
 """
 from repro.serve.engine import (Engine, FINISH_REASONS, ServeRequest,
-                                compiled_fns, padded_prefill_ok)
+                                clear_compiled_fns, compiled_fns,
+                                padded_prefill_ok)
+from repro.serve.paging import PagePool, PrefixCache
 from repro.serve.sampling import GREEDY, SamplingConfig, sample_token
 from repro.serve.scheduler import SlotScheduler
 
 __all__ = ["Engine", "ServeRequest", "FINISH_REASONS", "SamplingConfig",
-           "GREEDY", "sample_token", "SlotScheduler", "compiled_fns",
+           "GREEDY", "sample_token", "SlotScheduler", "PagePool",
+           "PrefixCache", "compiled_fns", "clear_compiled_fns",
            "padded_prefill_ok"]

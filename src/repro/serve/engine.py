@@ -1,21 +1,28 @@
 """Continuous-batching inference engine over the quantized backend registry.
 
-Fixed-slot design (static shapes — TPU/Pallas friendly):
+Fixed-slot decode over a block-paged persistent KV store (static shapes —
+TPU/Pallas friendly):
 
-  * one KV-cache pool, allocated once: every cache leaf has a `slots` batch
-    axis and `max_len` positions; a request owns exactly one slot from
-    admission to finish
+  * one decode workspace, allocated once: every cache leaf has a `slots`
+    batch axis and `max_len` positions; a request owns exactly one slot
+    row from admission to finish and all its decode writes land there
   * decode advances ALL slots each step with a per-slot position vector
     (`models/transformer_lm.decode_step` with `pos: (slots,)`); parked
     (free) slots run token 0 at position 0 and their writes are overwritten
     at the next admission
   * admission (scheduler.SlotScheduler) happens between decode steps: a
     freed slot is refilled immediately under the 'continuous' policy
-    instead of waiting for the wave to drain. The new request is prefilled
-    on a fresh batch=1 cache — length-aware, so the first token comes from
-    the prompt's true last position even when the prompt is padded to a
-    compile-friendly length bucket — and the WHOLE cache row is copied into
-    the slot, so no KV from the previous occupant can leak
+    instead of waiting for the wave to drain
+  * **prefix cache** (serve/paging.py): finished sequences are frozen into
+    refcounted pages of a shared page store, indexed by a radix tree over
+    token ids. Admission matches the new prompt against the tree; cached
+    full pages are gathered into the fresh cache row (the copy-on-write
+    copy — shared pages are immutable) and only the *suffix* is prefilled,
+    at its true absolute offset (`prefill(..., pos_offset=)`). A cache-hit
+    decode is bitwise-identical to the cold-miss decode, per backend
+    (tests/test_serve.py; the invariance argument is in docs/serving.md).
+    Paging is gated to position-indexed cache layouts — the same
+    `padded_prefill_ok` predicate; SSM/windowed archs serve unpaged.
   * finish reasons are always explicit: 'eos' | 'max_new' | 'max_len'
     (a request that hits the cache ceiling reports it — nothing is
     silently truncated)
@@ -25,16 +32,16 @@ The model executes through the quant backend registry via
 so every approximate-multiplier accumulator) a function of its own row
 only. Combined with position-masked attention over the fixed-size pool,
 that yields the engine's bitwise batching-invariance contract — a
-request's greedy tokens are identical served alone, in a full batch, or
-admitted mid-decode into a reused slot, for every registered backend
-(tests/test_serve.py; docs/serving.md).
+request's greedy tokens are identical served alone, in a full batch,
+admitted mid-decode into a reused slot, or admitted onto a prefix-cache
+hit, for every registered backend (tests/test_serve.py; docs/serving.md).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -44,6 +51,7 @@ from repro.models import transformer_lm as TLM
 from repro.models.transformer_lm import ArchConfig
 from repro.parallel.sharding import ShardingRules, DEFAULT_RULES
 from repro.serve.metrics import RequestTiming, summarize
+from repro.serve.paging import PrefixCache
 from repro.serve.sampling import GREEDY, SamplingConfig, sample_token
 from repro.serve.scheduler import SlotScheduler
 
@@ -62,17 +70,31 @@ class ServeRequest:
     timing: RequestTiming = dataclasses.field(default_factory=RequestTiming)
 
 
-@functools.lru_cache(maxsize=None)
+@functools.lru_cache(maxsize=8)
 def compiled_fns(cfg: ArchConfig, rules: ShardingRules):
     """Jitted prefill/decode shared across Engine instances (both frozen
     dataclasses hash) — the drain baseline and the continuous engine in
     benchmarks/serve_perf.py reuse one compilation, so the tok/s gap they
-    report is scheduling, not compile luck."""
-    prefill = jax.jit(lambda p, t, c, l: TLM.prefill(p, t, cfg, c, rules,
-                                                     lengths=l))
+    report is scheduling, not compile luck.
+
+    Bounded (maxsize=8): an eval sweep over every backend x variant would
+    otherwise pin every compiled prefill/decode executable for the process
+    lifetime. Engines keep their own references, so eviction never breaks
+    a live engine — it only allows dead executables to be collected. Eval
+    runners call :func:`clear_compiled_fns` between suites.
+    """
+    prefill = jax.jit(lambda p, t, c, l, off: TLM.prefill(
+        p, t, cfg, c, rules, lengths=l, pos_offset=off))
     decode = jax.jit(lambda p, c, t, pos: TLM.decode_step(p, t, pos, cfg, c,
                                                           rules))
     return prefill, decode
+
+
+def clear_compiled_fns() -> None:
+    """Drop all cached compiled prefill/decode executables (eval runners
+    call this between suites so back-to-back backend sweeps don't
+    accumulate live executables)."""
+    compiled_fns.cache_clear()
 
 
 def padded_prefill_ok(cfg: ArchConfig) -> bool:
@@ -84,7 +106,8 @@ def padded_prefill_ok(cfg: ArchConfig) -> bool:
     fold junk tokens in irreversibly, and windowed ring buffers alias junk
     slots onto real positions, so those archs prefill at the exact prompt
     length (one compile per distinct length — documented in
-    docs/serving.md)."""
+    docs/serving.md). The prefix cache is gated on the same predicate: only
+    position-indexed caches have per-position KV to page."""
     return cfg.ssm == "" and cfg.local_ratio == 0 and cfg.local_window == 0
 
 
@@ -96,7 +119,9 @@ class Engine:
                  rules: ShardingRules = DEFAULT_RULES,
                  admission: str = "continuous",
                  stream: Optional[Callable[[int, int], None]] = None,
-                 cache_dtype=jnp.float32):
+                 cache_dtype=jnp.float32,
+                 prefix_caching: bool = True, page_size: int = 8,
+                 cache_pages: Optional[int] = None):
         assert not cfg.embed_stub, "serving drives token models"
         self.cfg, self.params, self.rules = cfg, params, rules
         self.slots, self.max_len, self.eos_id = slots, max_len, eos_id
@@ -112,6 +137,18 @@ class Engine:
         self.decode_steps = 0
         self.busy_slot_steps = 0
         self.prefills = 0
+        self.prefill_tokens = 0       # real (unpadded) tokens prefilled
+        self.prefix_hit_tokens = 0    # prompt tokens served from the cache
+        # ---- paged prefix cache (gated to position-indexed cache layouts)
+        self.page_size = page_size
+        self.prefix: Optional[PrefixCache] = None
+        if prefix_caching and padded_prefill_ok(cfg) \
+                and 0 < page_size <= max_len:
+            n_pages = cache_pages or 2 * slots * (max_len // page_size)
+            self.prefix = PrefixCache(page_size, n_pages)
+            self.pages = TLM.init_page_store(cfg, n_pages, page_size,
+                                             cache_dtype)
+        self._slot_chain: List[Tuple[int, ...]] = [()] * slots
 
     # ---- request intake --------------------------------------------------
     def submit(self, req: ServeRequest) -> None:
@@ -126,15 +163,16 @@ class Engine:
         self.sched.submit(req)
 
     # ---- admission -------------------------------------------------------
-    def _bucket(self, plen: int) -> int:
+    def _bucket(self, plen: int, offset: int = 0) -> int:
         """Compile-friendly prefill length: next power of two >= plen
-        (capped at max_len), or the exact length where padding is unsafe."""
+        (capped so offset + bucket stays inside the cache), or the exact
+        length where padding is unsafe."""
         if not padded_prefill_ok(self.cfg):
             return plen
         bucket = 8
         while bucket < plen:
             bucket *= 2
-        return min(bucket, self.max_len)
+        return min(bucket, self.max_len - offset)
 
     def _admit(self) -> None:
         for slot, req in self.sched.admit():
@@ -142,17 +180,33 @@ class Engine:
             if plen > self.max_len:
                 # rejected before prefill: no room for even the prompt
                 req.finish_reason = "max_len"
-                self._retire(slot)
+                self._retire(slot, store=False)
                 continue
-            bucket = self._bucket(plen)
+            # longest cached full-page prefix, capped at plen-1 so at
+            # least one suffix token remains to produce the first logits
+            chain: Tuple[int, ...] = ()
+            hit = 0
+            if self.prefix is not None:
+                chain = tuple(self.prefix.match(req.prompt[:plen - 1]))
+                hit = len(chain) * self.page_size
+                if chain:
+                    self.prefix.acquire(chain)   # pinned until retirement
+                    self.prefix_hit_tokens += hit
+            self._slot_chain[slot] = chain
+            suffix = req.prompt[hit:]
+            bucket = self._bucket(len(suffix), offset=hit)
             toks = np.zeros((1, bucket), np.int32)
-            toks[0, :plen] = req.prompt
+            toks[0, :len(suffix)] = suffix
             fresh = TLM.init_cache(self.cfg, 1, self.max_len,
                                    self._cache_dtype)
+            if chain:
+                # the COW copy: shared pages -> this request's private row
+                fresh = TLM.gather_pages(fresh, self.pages, chain)
             logits, fresh = self._prefill(
                 self.params, jnp.asarray(toks), fresh,
-                jnp.asarray([plen], jnp.int32))
+                jnp.asarray([len(suffix)], jnp.int32), jnp.int32(hit))
             self.prefills += 1
+            self.prefill_tokens += len(suffix)
             # full-row copy: the freed slot inherits nothing from its
             # previous occupant (zero KV-cache leakage on reuse)
             self.pool = jax.tree.map(
@@ -186,14 +240,33 @@ class Engine:
             # report it instead of silently truncating
             req.finish_reason = "max_len"
 
-    def _retire(self, slot: int) -> None:
+    def _retire(self, slot: int, store: bool = True) -> None:
         req = self.sched.release(slot)
         req.timing.done_t = time.time()
+        if self.prefix is not None:
+            if store:
+                self._store_pages(slot, req)
+            if self._slot_chain[slot]:
+                self.prefix.release(self._slot_chain[slot])
+            self._slot_chain[slot] = ()
         self._slot_req[slot] = None
         self._tok[slot] = 0
         self._pos[slot] = 0     # park: writes land at pos 0 of a dead row
         #                         and are overwritten by the next admission
         self.completed.append(req)
+
+    def _store_pages(self, slot: int, req: ServeRequest) -> None:
+        """Publish this request's KV to the prefix cache. KV exists for
+        positions [0, plen + m - 1): the prompt plus every generated token
+        that was fed back (the last sampled token never was), so the
+        cacheable key is prompt ++ output[:-1]."""
+        seq = req.prompt if not req.output else np.concatenate(
+            [req.prompt, np.asarray(req.output[:-1], np.int32)])
+        new = self.prefix.insert(seq)
+        if new:
+            self.pages = TLM.store_pages(
+                self.pages, self.pool, slot,
+                [p for p, _ in new], [i for _, i in new])
 
     # ---- the serving loop ------------------------------------------------
     def step(self) -> bool:
@@ -229,4 +302,8 @@ class Engine:
         return summarize(self.completed, time.time() - t0,
                          n_slots=self.slots, decode_steps=self.decode_steps,
                          busy_slot_steps=self.busy_slot_steps,
-                         prefills=self.prefills, waves=self.sched.waves)
+                         prefills=self.prefills, waves=self.sched.waves,
+                         prefill_tokens=self.prefill_tokens,
+                         prefix_hit_tokens=self.prefix_hit_tokens,
+                         prefix_stats=(self.prefix.stats()
+                                       if self.prefix else None))

@@ -33,15 +33,26 @@ class RequestTiming:
 
 def summarize(completed, elapsed_s: float, *, n_slots: int,
               decode_steps: int, busy_slot_steps: int, prefills: int,
-              waves: int) -> Dict:
+              waves: int, prefill_tokens: int = 0,
+              prefix_hit_tokens: int = 0,
+              prefix_stats: Optional[Dict] = None) -> Dict:
     """Aggregate stats over a finished engine run (flat dict — the
-    benchmark writes these rows into the versioned artifact schema)."""
+    benchmark writes these rows into the versioned artifact schema).
+
+    ``prefix_hit_rate`` is the fraction of prompt tokens served from the
+    paged prefix cache instead of being prefilled: hit_tokens /
+    (hit_tokens + prefilled_tokens). 0.0 on an unpaged engine or a fully
+    cold workload — the quantity the shared-system-prompt traffic shape
+    drives up (every avoided prefill token skips the MAC-densest phase,
+    where the approximate-multiplier energy savings are largest).
+    """
     new_tokens = sum(len(r.output) for r in completed)
     ttfts = [r.timing.ttft_s for r in completed
              if r.timing.ttft_s is not None]
     reasons: Dict[str, int] = {}
     for r in completed:
         reasons[r.finish_reason] = reasons.get(r.finish_reason, 0) + 1
+    prompt_tokens = prefix_hit_tokens + prefill_tokens
     return {
         "requests": len(completed),
         "new_tokens": new_tokens,
@@ -49,6 +60,10 @@ def summarize(completed, elapsed_s: float, *, n_slots: int,
         "tok_per_s": new_tokens / max(elapsed_s, 1e-9),
         "decode_steps": decode_steps,
         "prefills": prefills,
+        "prefill_tokens": prefill_tokens,
+        "prefix_hit_tokens": prefix_hit_tokens,
+        "prefix_hit_rate": prefix_hit_tokens / max(prompt_tokens, 1),
+        "prefix_stats": prefix_stats,
         "waves": waves,
         "occupancy": busy_slot_steps / max(decode_steps * n_slots, 1),
         "ttft_ms_mean": (sum(ttfts) / len(ttfts) * 1e3) if ttfts else None,

@@ -24,6 +24,14 @@ class SamplingConfig:
     top_k: int = 0                  # used when kind == 'top_k'
     seed: int = 0
 
+    def __post_init__(self):
+        # an invalid temperature must not silently turn into near-argmax
+        # (the old code clamped to 1e-6); greedy ignores temperature
+        if self.kind in ("temperature", "top_k") and self.temperature <= 0:
+            raise ValueError(
+                f"kind={self.kind!r} requires temperature > 0, got "
+                f"{self.temperature} (use kind='greedy' for argmax)")
+
 
 GREEDY = SamplingConfig()
 
@@ -38,13 +46,16 @@ def sample_token(logits, scfg: SamplingConfig, rid: int, step: int) -> int:
         # dispatch on the hot decode loop (same first-max tie-breaking)
         return int(np.argmax(np.asarray(logits)))
     logits = jnp.asarray(logits)
-    scaled = logits.astype(jnp.float32) / max(scfg.temperature, 1e-6)
+    scaled = logits.astype(jnp.float32) / scfg.temperature   # validated > 0
+    key = jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(scfg.seed), rid), step)
     if scfg.kind == "top_k":
         if scfg.top_k < 1:
             raise ValueError("kind='top_k' requires top_k >= 1")
         k = min(scfg.top_k, scaled.shape[-1])
-        kth = jnp.sort(scaled)[-k]
-        scaled = jnp.where(scaled >= kth, scaled, -jnp.inf)
-    key = jax.random.fold_in(
-        jax.random.fold_in(jax.random.PRNGKey(scfg.seed), rid), step)
+        # lax.top_k semantics: exactly k candidates, ties at the k-th
+        # value broken by index order — a threshold keep (scaled >= kth)
+        # would keep every tied logit and sample from more than k
+        vals, idx = jax.lax.top_k(scaled, k)
+        return int(idx[jax.random.categorical(key, vals)])
     return int(jax.random.categorical(key, scaled))

@@ -19,6 +19,7 @@ thousands of arrival orders without compiling a model.
 """
 from __future__ import annotations
 
+import heapq
 from collections import deque
 from typing import Any, Dict, List, Tuple
 
@@ -33,9 +34,10 @@ class SlotScheduler:
             raise ValueError(f"unknown policy {policy!r}; one of {POLICIES}")
         self.n_slots = n_slots
         self.policy = policy
-        # descending so pop() hands out the lowest-numbered free slot —
-        # deterministic slot assignment makes slot-reuse tests exact
-        self._free: List[int] = list(range(n_slots - 1, -1, -1))
+        # min-heap so the lowest-numbered free slot is handed out first —
+        # deterministic slot assignment makes slot-reuse and prefix-cache
+        # page-layout tests exact (O(log n) per release, no re-sort)
+        self._free: List[int] = list(range(n_slots))
         self._queue: deque = deque()
         self._running: Dict[int, Any] = {}
         self.submitted = 0
@@ -78,7 +80,7 @@ class SlotScheduler:
             return []
         out: List[Tuple[int, Any]] = []
         while self._free and self._queue:
-            slot = self._free.pop()
+            slot = heapq.heappop(self._free)
             item = self._queue.popleft()
             self._running[slot] = item
             out.append((slot, item))
@@ -90,7 +92,6 @@ class SlotScheduler:
         """Finish the request occupying `slot`; the slot returns to the
         free-list (lowest-numbered slots are reused first)."""
         item = self._running.pop(slot)          # KeyError = engine bug
-        self._free.append(slot)
-        self._free.sort(reverse=True)
+        heapq.heappush(self._free, slot)
         self.completed += 1
         return item

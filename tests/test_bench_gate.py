@@ -31,9 +31,32 @@ def test_rows_extraction_filters_untimed_and_suites():
                              "serve": [{"backend": "x",
                                         "us_per_call": 5.0}]},
                             only={"kernels"})
-    assert ("kernels", "int8_exact", 256, 256, 256) in rows
+    # kernel rows carry shape; the policy/offered/share components sit at
+    # their defaults so pre-existing kernel baselines stay comparable
+    assert ("kernels", "int8_exact", 256, 256, 256, "", 0, -1) in rows
     assert all(k[0] == "kernels" for k in rows)
     assert not any(k[1] == "note_row" for k in rows)
+
+
+def test_serve_rows_key_on_sweep_point_and_normalize_by_bf16():
+    # serve rows are distinguished by (policy, offered, share), not shape,
+    # and normalize against the same run's bf16 at the same sweep point
+    results = {"serve": [
+        {"backend": "bf16", "policy": "cached", "offered": 16,
+         "share": 0.5, "us_per_call": 1000.0},
+        {"backend": "approx_deficit", "policy": "cached", "offered": 16,
+         "share": 0.5, "us_per_call": 4000.0},
+        {"backend": "approx_deficit", "policy": "continuous",
+         "offered": 16, "share": -1.0, "us_per_call": 3000.0},
+    ]}
+    rows = bench_gate._rows(results, only={"serve"})
+    assert len(rows) == 3, "sweep points collided into one key"
+    values, gated = bench_gate._normalized(rows, absolute=False)
+    key = ("serve", "approx_deficit", 0, 0, 0, "cached", 16, 0.5)
+    assert values[key] == 4.0 and key in gated
+    # no bf16 row at the continuous point in this fixture: raw, ungated
+    assert ("serve", "approx_deficit", 0, 0, 0, "continuous", 16, -1.0) \
+        not in gated
 
 
 @pytest.mark.parametrize("new_deficit,rc", [

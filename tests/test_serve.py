@@ -16,6 +16,10 @@ that make it true are each pinned here:
     truncation)
   * FIFO slot scheduler (property-tested: conservation, capacity, no
     starvation under random arrival orders)
+  * paged prefix cache (property-tested bookkeeping: refcount
+    conservation, no page aliasing, pinned chains never evicted — and the
+    engine-level contract: a cache-hit decode is bitwise equal to the
+    cold-miss decode, per backend)
 """
 import dataclasses
 
@@ -29,8 +33,10 @@ from repro.configs import registry
 from repro.models import transformer_lm as TLM
 from repro.quant import matmul as QM
 from repro.quant.quantize import for_lm
-from repro.serve import (Engine, FINISH_REASONS, SamplingConfig,
-                         ServeRequest, SlotScheduler, padded_prefill_ok)
+from repro.serve import (Engine, FINISH_REASONS, PagePool, PrefixCache,
+                         SamplingConfig, ServeRequest, SlotScheduler,
+                         clear_compiled_fns, compiled_fns,
+                         padded_prefill_ok, sample_token)
 from repro.train.serve_loop import Request, Server
 
 BACKENDS = list(QM.list_backends())
@@ -408,3 +414,267 @@ def test_engine_rejects_empty_prompt(tiny_lm):
     eng = Engine(cfg, params, slots=1, max_len=8)
     with pytest.raises(ValueError, match="empty prompt"):
         eng.submit(ServeRequest(rid=0, prompt=np.zeros(0, np.int32)))
+
+
+# ---------------------------------------------------------------------------
+# paged KV pool bookkeeping (pure Python — no jax in the loop)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 2), min_size=1, max_size=60),
+       st.integers(1, 8))
+def test_page_pool_conserves_pages(ops, n_pages):
+    # random alloc/incref/decref walk; at every step the ledger balances
+    pool = PagePool(n_pages)
+    held = []                     # one entry per reference we hold
+    for op in ops:
+        if op == 0:
+            p = pool.alloc()
+            if p is not None:
+                assert p not in held, "alloc handed out a live page"
+                held.append(p)
+        elif op == 1 and held:
+            pool.incref(held[0])
+            held.append(held[0])
+        elif op == 2 and held:
+            pool.decref(held.pop())
+        live = pool.live
+        # conservation: every page is either free or live, never both/lost
+        assert pool.n_free + len(live) == n_pages
+        assert sorted(set(held)) == live
+        for p in set(held):
+            assert pool.refcount(p) == held.count(p)
+
+
+def test_page_pool_rejects_use_of_free_pages():
+    pool = PagePool(2)
+    p = pool.alloc()
+    pool.decref(p)
+    with pytest.raises(RuntimeError, match="decref on free"):
+        pool.decref(p)
+    with pytest.raises(RuntimeError, match="incref on free"):
+        pool.incref(p)
+    with pytest.raises(ValueError, match="n_pages"):
+        PagePool(0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.lists(st.integers(0, 3), min_size=1, max_size=12),
+                min_size=1, max_size=8),
+       st.integers(1, 3))
+def test_prefix_cache_no_aliasing_and_conservation(seqs, page_size):
+    # drive the admission lifecycle (match -> acquire -> insert -> release)
+    # over random token streams from a tiny alphabet (maximal prefix
+    # overlap); the radix tree must never alias a page between two nodes
+    # nor leak one
+    cache = PrefixCache(page_size, n_pages=16)
+    for seq in seqs:
+        chain = cache.match(seq)
+        assert len(chain) * page_size <= len(seq)
+        cache.acquire(chain)
+        cache.insert(seq)
+        cache.release(chain)
+        pages = cache.pages()
+        assert len(pages) == len(set(pages)), "page aliased between nodes"
+        assert len(pages) + cache.pool.n_free == 16, "page leaked"
+        # with no request in flight the tree holds exactly one ref per page
+        assert all(cache.pool.refcount(p) == 1 for p in pages)
+
+
+def test_prefix_cache_longest_match_is_full_pages_only():
+    cache = PrefixCache(2, 8)
+    cache.insert([1, 2, 3, 4, 5, 6])
+    assert len(cache.match([1, 2, 3, 4, 9, 9])) == 2   # diverges at page 3
+    assert len(cache.match([1, 2])) == 1
+    assert cache.match([9, 9]) == []
+    assert len(cache.match([1, 2, 3])) == 1            # partial page: no match
+    # matching twice returns the same chain (stable page ids)
+    assert cache.match([1, 2, 3, 4]) == cache.match([1, 2, 3, 4])
+
+
+def test_prefix_cache_eviction_spares_pinned_chains():
+    cache = PrefixCache(1, 4)
+    cache.insert([1, 2])
+    chain = cache.match([1, 2])
+    cache.acquire(chain)              # a live request pins the chain
+    new = cache.insert([7, 8, 9])     # wants 3 pages; only 2 free
+    assert len(new) == 2, "insert must stop early when nothing is evictable"
+    assert cache.match([1, 2]) == chain, "pinned chain was evicted"
+    assert [cache.pool.refcount(p) for p in chain] == [2, 2]
+    cache.release(chain)
+    # unpinned leaves are now fair game: LRU eviction frees room
+    assert len(cache.insert([5, 5, 5])) == 3
+    assert cache.evictions >= 3
+    # the ledger still balances after evictions
+    assert len(cache.pages()) + cache.pool.n_free == 4
+
+
+# ---------------------------------------------------------------------------
+# prefix cache at the engine level: hit == cold miss, bitwise, per backend
+# ---------------------------------------------------------------------------
+
+def _shared_prompts(vocab, seed, suffixes=(4, 3, 5)):
+    """Prompts sharing an 8-token prefix (2 pages at page_size=4)."""
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, vocab, 8).astype(np.int32)
+    return [np.concatenate([shared,
+                            rng.integers(0, vocab, n).astype(np.int32)])
+            for n in suffixes]
+
+
+@pytest.mark.parametrize("backend", ["bf16"] + BACKENDS)
+def test_prefix_hit_equals_cold_miss_per_backend(tiny_lm, backend):
+    # THE paging contract: after request A retires and publishes the shared
+    # prefix, request B's admission gathers those pages instead of
+    # prefilling them — and decodes the exact same tokens as a cold engine
+    # that prefills everything. KV at position i is a pure function of
+    # tokens 0..i (per-token act scales, position-masked attention), so the
+    # gathered pages are bitwise what the cold prefill would have written.
+    cfg0, params = tiny_lm
+    cfg = dataclasses.replace(cfg0, quant=for_lm(backend))
+    pa, pb, _ = _shared_prompts(cfg.vocab, seed=21)
+
+    warm = Engine(cfg, params, slots=2, max_len=MAX_LEN, page_size=4)
+    warm.submit(ServeRequest(rid=0, prompt=pa, max_new=4))
+    warm.run()                        # retires A, publishes its pages
+    warm.submit(ServeRequest(rid=1, prompt=pb, max_new=5))
+    warm.run()
+    assert warm.prefix_hit_tokens >= 8, "request B missed the shared prefix"
+    hit = next(r for r in warm.completed if r.rid == 1).output
+
+    cold = Engine(cfg, params, slots=2, max_len=MAX_LEN, page_size=4)
+    cold.submit(ServeRequest(rid=1, prompt=pb, max_new=5))
+    cold.run()
+    assert cold.prefix_hit_tokens == 0
+    miss = cold.completed[0].output
+
+    off = Engine(cfg, params, slots=2, max_len=MAX_LEN,
+                 prefix_caching=False)
+    off.submit(ServeRequest(rid=1, prompt=pb, max_new=5))
+    off.run()
+    assert hit == miss == off.completed[0].output, (
+        f"{backend}: hit={hit} miss={miss} unpaged={off.completed[0].output}"
+        " — the prefix cache changed this request's tokens")
+    assert hit == _oracle(cfg, params, pb, 5), \
+        f"{backend}: paged engine diverged from the reference decode"
+
+
+def test_mid_decode_admission_on_cache_hit_matches_solo(tiny_lm):
+    # the probe queues behind a full pool, is admitted mid-decode into a
+    # reused slot AND lands on a prefix-cache hit (the first retiree
+    # published the shared pages) — still bitwise equal to its solo serve
+    cfg, params = tiny_lm
+    p0, p1, probe = _shared_prompts(cfg.vocab, seed=22)
+
+    eng = Engine(cfg, params, slots=2, max_len=MAX_LEN, page_size=4)
+    for rid, (p, m) in enumerate([(p0, 2), (p1, 6), (probe, 4)]):
+        eng.submit(ServeRequest(rid=rid, prompt=p, max_new=m))
+    stats = eng.run()
+    assert stats["waves"] >= 2, "probe was not admitted mid-decode"
+    assert eng.prefix_hit_tokens >= 8, "probe admission was not a cache hit"
+    mid = next(r for r in eng.completed if r.rid == 2).output
+
+    solo = Engine(cfg, params, slots=2, max_len=MAX_LEN, page_size=4)
+    solo.submit(ServeRequest(rid=2, prompt=probe, max_new=4))
+    solo.run()
+    assert mid == solo.completed[0].output
+
+
+def test_prefix_cache_survives_slot_reuse_without_leakage(tiny_lm):
+    # slots=1: every request reuses the same slot row; published pages must
+    # come from each request's own KV, not the previous occupant's
+    cfg, params = tiny_lm
+    pa, pb, pc = _shared_prompts(cfg.vocab, seed=23)
+    eng = Engine(cfg, params, slots=1, max_len=MAX_LEN, page_size=4)
+    for rid, p in enumerate([pa, pb, pc]):
+        eng.submit(ServeRequest(rid=rid, prompt=p, max_new=3))
+    eng.run()
+    for rid, p in [(1, pb), (2, pc)]:
+        solo = Engine(cfg, params, slots=1, max_len=MAX_LEN,
+                      prefix_caching=False)
+        solo.submit(ServeRequest(rid=rid, prompt=p, max_new=3))
+        solo.run()
+        assert next(r for r in eng.completed if r.rid == rid).output \
+            == solo.completed[0].output
+
+
+def test_prefix_cache_gating(tiny_lm):
+    cfg, params = tiny_lm
+    assert Engine(cfg, params, slots=1, max_len=16).prefix is not None
+    assert Engine(cfg, params, slots=1, max_len=16,
+                  prefix_caching=False).prefix is None
+    # a page never fits: paging disables itself instead of crashing
+    assert Engine(cfg, params, slots=1, max_len=4,
+                  page_size=8).prefix is None
+    # windowed/SSM cache layouts have no per-position KV to page (same
+    # predicate as padded prefill; rwkv/hymba covered by
+    # test_padded_prefill_gate)
+    gcfg = registry.reduced("gemma3-27b", d_model=64, n_heads=4, d_ff=128,
+                            vocab=64, vocab_pad=64, head_dim=16)
+    gparams = TLM.init(gcfg, jax.random.PRNGKey(0))
+    assert Engine(gcfg, gparams, slots=1, max_len=16).prefix is None
+
+
+# ---------------------------------------------------------------------------
+# serving-path regressions: eval sweep, sampling, compiled-fn cache
+# ---------------------------------------------------------------------------
+
+def test_parity_handles_empty_outputs():
+    # regression: an engine run that produced no tokens used to divide by
+    # zero in the serve suite's parity metric
+    from repro.eval.serve import _parity
+    assert _parity({}, {}) == (0.0, 0.0)
+    assert _parity({0: []}, {0: []}) == (0.0, 0.0)
+    assert _parity({0: [1, 2]}, {})[0] == 0.0
+    assert _parity({0: [1, 2, 9]}, {0: [1, 2, 3]}) == (pytest.approx(200 / 3),
+                                                       2.0)
+
+
+def test_serve_suite_survives_non_bf16_first_sweep(monkeypatch):
+    # regression: the suite runner assumed sweep_points yields bf16 first
+    # and crashed in _parity(outs, None) otherwise; the bf16 reference is
+    # now computed explicitly before the loop
+    import repro.eval.runners as runners
+    from repro.eval import serve as SERVE
+    monkeypatch.setattr(
+        runners, "sweep_points",
+        lambda variants=True: [("int8_exact", "int8_exact", "proposed")])
+    art = SERVE.run(smoke=True, seed=0)
+    rows = art["tables"]["serve"]
+    assert [r["backend"] for r in rows] == ["int8_exact"]
+    assert rows[0]["solo_match"] is True
+    assert 0.0 <= rows[0]["hit_rate"] <= 1.0
+    assert 0.0 <= rows[0]["match_bf16"] <= 100.0
+
+
+def test_top_k_samples_at_most_k_candidates():
+    # regression: the old threshold keep (scaled >= kth value) admitted
+    # every logit tied at the k-th place; lax.top_k keeps exactly k,
+    # breaking ties by index
+    logits = jnp.asarray([5.0, 5.0, 5.0, 0.0])
+    scfg = SamplingConfig(kind="top_k", temperature=1.0, top_k=2, seed=0)
+    draws = {sample_token(logits, scfg, rid=0, step=s) for s in range(40)}
+    assert draws <= {0, 1}, f"drew outside the top-2 set: {draws}"
+    assert draws == {0, 1}, "a kept candidate became unreachable"
+
+
+def test_sampling_rejects_nonpositive_temperature():
+    # regression: temperature <= 0 used to clamp to 1e-6 and silently
+    # become near-argmax sampling
+    for kind in ("temperature", "top_k"):
+        for temp in (0.0, -1.0):
+            with pytest.raises(ValueError, match="temperature"):
+                SamplingConfig(kind=kind, temperature=temp, top_k=4)
+    SamplingConfig(kind="greedy", temperature=0.0)   # greedy ignores it
+
+
+def test_compiled_fns_cache_is_bounded_and_clearable(tiny_lm):
+    # regression: the jit cache was an unbounded lru_cache — an eval sweep
+    # over every backend x variant pinned every executable for the process
+    # lifetime with no way to drop them
+    cfg, params = tiny_lm
+    assert compiled_fns.cache_info().maxsize is not None
+    Engine(cfg, params, slots=1, max_len=8)
+    assert compiled_fns.cache_info().currsize >= 1
+    clear_compiled_fns()
+    assert compiled_fns.cache_info().currsize == 0
