@@ -188,6 +188,43 @@ def run(quick: bool = True) -> List[Dict]:
                      "speedup_vs_deficit": None})
     print(f"kernel_perf: fused/unfused epilogue ratio = {us_f / us_u:.2f} "
           "(<= 1.0 means the in-kernel epilogue wins)")
+
+    # sharded rows: the mesh-partitioned integer core (quant/sharded.py) on
+    # the forced-host-device mesh, dense backends at the acceptance shape.
+    # Keyed policy='sharded' so the gate normalizes them against the
+    # sharded int8_exact row in the same cell (collective overhead on 8
+    # host CPU threads is not comparable to single-device wall-times).
+    # Single-device runs sweep no sharded rows, which the gate treats as a
+    # deliberate sweep-level difference, not a regression.
+    if jax.device_count() >= 2:
+        from repro.launch.mesh import make_serving_mesh
+        from repro.quant.sharded import sharded_integer_matmul
+        mesh = make_serving_mesh()
+        m = k = n = 256
+        x, w = _operands(rng, m, k, n)
+        base = None
+        sharded_rows = []
+        for name in DENSE:
+            cfg = QuantConfig(backend=name)
+            jfn = jax.jit(lambda a, b, c=cfg: sharded_integer_matmul(
+                a, b, c, mesh, k_axis=None))
+            us = _best_of(jfn, x, w, reps=reps, warmup=warmup)
+            if name == "int8_exact":
+                base = us
+            sharded_rows.append({"backend": name, "policy": "sharded",
+                                 "m": m, "k": k, "n": n, "us_per_call": us,
+                                 "corr_rank": _corr_rank(name),
+                                 "mesh": "x".join(map(str, mesh.devices.shape))})
+        for r in sharded_rows:
+            r["slowdown_vs_exact"] = (r["us_per_call"] / base
+                                      if base else None)
+            r["speedup_vs_deficit"] = None
+            print(f"kernel_perf: {r['backend']:22s} "
+                  f"{r['us_per_call']:12.1f} us  "
+                  f"({r['slowdown_vs_exact']:8.1f}x exact)  "
+                  f"[{m}x{k}x{n} int8, sharded "
+                  f"{tuple(mesh.devices.shape)}]")
+        rows.extend(sharded_rows)
     return rows
 
 

@@ -67,10 +67,10 @@ def _prefix_workload(n_req: int, vocab: int, seed: int, share: float,
 
 
 def _serve(cfg, params, reqs, policy: str, slots: int, max_len: int,
-           prefix_caching: bool = False) -> Dict:
+           prefix_caching: bool = False, mesh=None) -> Dict:
     from repro.serve import Engine, ServeRequest
     eng = Engine(cfg, params, slots=slots, max_len=max_len,
-                 admission=policy, prefix_caching=prefix_caching)
+                 admission=policy, prefix_caching=prefix_caching, mesh=mesh)
     for rid, prompt, max_new in reqs:
         eng.submit(ServeRequest(rid=rid, prompt=prompt, max_new=max_new))
     return eng.run()
@@ -166,6 +166,33 @@ def run(quick: bool = True) -> List[Dict]:
                   f"share={share:.2f} hit={st['prefix_hit_rate']:.2f} "
                   f"prefill_tok={st['prefill_tokens']:4d} "
                   f"{st['tok_per_s']:8.1f} tok/s")
+        # -- sharded engine: the same continuous workload through
+        #    Engine(mesh=...) (docs/sharding.md). Keyed policy='sharded' so
+        #    the gate normalizes against the sharded bf16 row in the same
+        #    cell — collective overhead on forced host devices is not
+        #    comparable to the single-device rows. Single-device runs sweep
+        #    no sharded rows (sweep-level difference, not a regression). --
+        if jax.device_count() >= 2:
+            from repro.launch.mesh import make_serving_mesh
+            mesh = make_serving_mesh()
+            offered = max(loads)
+            reqs = _workload(offered, cfg0.vocab, seed=offered)
+            st = max((_serve(cfg, params, reqs, "continuous", slots,
+                             max_len, mesh=mesh)
+                      for _ in range(2)), key=lambda s: s["tok_per_s"])
+            rows.append({"backend": backend, "policy": "sharded",
+                         "offered": offered, "slots": slots, "share": -1.0,
+                         "mesh": "x".join(map(str, mesh.devices.shape)),
+                         "requests": st["requests"],
+                         "new_tokens": st["new_tokens"],
+                         "decode_steps": st["decode_steps"],
+                         "tok_per_s": round(st["tok_per_s"], 2),
+                         "us_per_call": round(_us_per_call(st), 2),
+                         "ttft_ms_mean": round(st["ttft_ms_mean"], 2),
+                         "occupancy": round(st["occupancy"], 4)})
+            print(f"serve_perf: {backend:16s} sharded    "
+                  f"offered={offered:3d} {st['tok_per_s']:8.1f} tok/s "
+                  f"mesh={tuple(mesh.devices.shape)}")
         # drop this backend's executables before the next one compiles —
         # the engine cache is bounded (maxsize=8) but there is no reason
         # to carry dead configs through a sweep
@@ -184,7 +211,9 @@ def artifact(rows: List[Dict], quick: bool) -> Dict:
          "act_scale": "per_token", "page_size": PAGE,
          "note": "CPU reference wall-times; scheduling rows run with "
                  "prefix caching off (policy-only gap), cached rows sweep "
-                 "the shared-prefix fraction with caching on"})
+                 "the shared-prefix fraction with caching on; sharded "
+                 "rows run the same engine over the forced-host-device "
+                 "mesh (policy='sharded', normalized in-cell vs bf16)"})
 
 
 def loaded_points(rows: List[Dict]) -> List[Dict]:

@@ -1,5 +1,16 @@
+import os
 import sys
 from pathlib import Path
+
+# Force a multi-device host platform BEFORE jax initializes: the sharded
+# parity suites (tests/test_sharded_backends.py, tests/test_serve.py,
+# tests/test_distributed.py, tests/test_pipeline.py) need >= 8 devices to
+# build a 2x4 serving mesh on CPU-only CI. Appending is idempotent and a
+# caller-provided count (or a real accelerator platform) is left alone.
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=8").strip()
 
 SRC = Path(__file__).resolve().parent / "src"
 if str(SRC) not in sys.path:

@@ -9,6 +9,8 @@ batch-synchronous baseline for comparison (docs/serving.md).
 
 Run:  PYTHONPATH=src python examples/serve_lm.py [--backend approx_lut]
       PYTHONPATH=src python examples/serve_lm.py --sampling top_k --top-k 8
+      XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/serve_lm.py --mesh data,model
 """
 import argparse
 import dataclasses
@@ -43,6 +45,12 @@ ap.add_argument("--no-prefix-cache", action="store_true",
                 help="disable the paged KV prefix cache")
 ap.add_argument("--stream", action="store_true",
                 help="print tokens as they are emitted")
+ap.add_argument("--mesh", default=None, metavar="AXES",
+                help="run the engine over a device mesh (docs/sharding.md): "
+                     "comma-separated axis names, e.g. 'data,model' splits "
+                     "the visible devices over those axes "
+                     "(launch/mesh.py picks the factorization); served "
+                     "tokens are identical to the single-device engine")
 args = ap.parse_args()
 
 cfg = registry.reduced("smollm-135m", n_layers=4, d_model=128, d_ff=256)
@@ -52,9 +60,16 @@ scfg = SamplingConfig(kind=args.sampling, temperature=args.temperature,
                       top_k=args.top_k, seed=args.seed)
 stream = ((lambda rid, tok: print(f"  rid {rid} -> {tok}"))
           if args.stream else None)
+mesh = None
+if args.mesh:
+    from repro.launch.mesh import make_serving_mesh
+    mesh = make_serving_mesh(
+        axis_names=tuple(a.strip() for a in args.mesh.split(",")))
+    print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))} over "
+          f"{mesh.devices.size} device(s)")
 eng = Engine(cfg, params, slots=args.slots, max_len=64,
              admission=args.policy, stream=stream,
-             prefix_caching=not args.no_prefix_cache)
+             prefix_caching=not args.no_prefix_cache, mesh=mesh)
 rng = np.random.default_rng(args.seed)
 shared = rng.integers(0, cfg.vocab, args.shared_prefix).astype(np.int32)
 for rid in range(args.requests):

@@ -19,6 +19,38 @@ def make_host_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def make_serving_mesh(shape=None, axis_names=("data", "model"),
+                      devices=None):
+    """('data', 'model') mesh over the locally available devices.
+
+    Unlike the fixed production shapes this adapts to whatever the host
+    exposes — 8 forced host-platform CPU devices in CI become a (2, 4)
+    mesh, a single dev box becomes (1, 1) — so the sharded Engine and the
+    parity suites construct the same mesh everywhere. `shape` pins an
+    explicit factorization (product must not exceed the device count);
+    by default the device count is split as evenly as possible with the
+    larger factor on the last ('model') axis.
+    """
+    import numpy as np
+    devs = list(devices if devices is not None else jax.devices())
+    if shape is None:
+        n = len(devs)
+        d = 1
+        for cand in range(int(n ** 0.5), 0, -1):
+            if n % cand == 0:
+                d = cand
+                break
+        shape = (d, n // d)
+        if len(axis_names) != 2:
+            raise ValueError("pass an explicit shape for non-2D meshes")
+    total = int(np.prod(shape))
+    if total > len(devs):
+        raise ValueError(f"mesh shape {shape} needs {total} devices, "
+                         f"have {len(devs)}")
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(devs[:total]).reshape(shape), axis_names)
+
+
 # TPU v5e hardware constants for the roofline model (per chip).
 PEAK_FLOPS_BF16 = 197e12          # FLOP/s
 HBM_BW = 819e9                    # bytes/s

@@ -28,7 +28,8 @@ from repro.nn import layers as L
 from repro.nn import moe as MOE
 from repro.nn import ssm as SSM
 from repro.nn.module import ParamDesc, stack, init_params as _init
-from repro.parallel.sharding import ShardingRules, DEFAULT_RULES, constrain
+from repro.parallel.sharding import (ShardingRules, DEFAULT_RULES, constrain,
+                                     prune_spec)
 from repro.quant.quantize import QuantConfig, BF16
 
 
@@ -235,6 +236,52 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int,
         blocks.append(jax.tree.map(
             lambda x: jnp.broadcast_to(x, (rep,) + x.shape).copy(), group))
     return {"blocks": blocks}
+
+
+def cache_logical(cfg: ArchConfig):
+    """Logical axis names per `init_cache` leaf — the same tree structure
+    with tuple-of-names leaves (tuples marked as leaves via is_leaf when
+    traversing). Batch rows map to 'data', (KV) heads to 'model', positions
+    and state feature dims stay replicated; the stacked group dim is
+    'layers'. Consumed by :func:`cache_specs` for the sharded serving
+    engine (docs/sharding.md)."""
+    def kind_axes(kind):
+        if kind == "rwkv":
+            return {"S": ("batch", "heads", None, None),
+                    "xprev": ("batch", None),
+                    "cm_xprev": ("batch", None)}
+        if kind == "hymba":
+            return {"attn": A.cache_logical(cfg.attn_cfg("hymba_attn")),
+                    "h": ("batch", None, None),
+                    "conv": ("batch", None, None)}
+        if kind == "cross":
+            return {}
+        return A.cache_logical(cfg.attn_cfg(kind))
+
+    is_ax = lambda x: isinstance(x, tuple)  # noqa: E731
+    blocks = []
+    for rep, kinds in cfg.blocks():
+        group = {f"k{i}_{kind}": kind_axes(kind)
+                 for i, kind in enumerate(kinds)}
+        blocks.append(jax.tree.map(lambda ax: ("layers",) + ax, group,
+                                   is_leaf=is_ax))
+    return {"blocks": blocks}
+
+
+def cache_specs(cfg: ArchConfig, cache, rules: ShardingRules, mesh):
+    """PartitionSpec tree (same treedef as `cache`) for any `init_cache` /
+    `init_page_store` pytree, with non-dividing mesh axes pruned — the
+    batch dim of a page store is its page dim, so the same rules shard a
+    serving pool over slots and a page store over pages. Leaves may be
+    arrays or ShapeDtypeStructs (anything with .shape)."""
+    logical = cache_logical(cfg)
+    flat, treedef = jax.tree.flatten(cache)
+    lflat = jax.tree.flatten(
+        logical, is_leaf=lambda x: isinstance(x, tuple))[0]
+    assert len(flat) == len(lflat), "cache_logical drifted from init_cache"
+    specs = [prune_spec(x.shape, rules.spec(ax, mesh), mesh)
+             for x, ax in zip(flat, lflat)]
+    return jax.tree.unflatten(treedef, specs)
 
 
 # ---------------------------------------------------------------------------

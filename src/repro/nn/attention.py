@@ -126,6 +126,18 @@ def init_cache(cfg: AttnConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
                            dtype)}
 
 
+def cache_logical(cfg: AttnConfig):
+    """Logical axis names per `init_cache` leaf (same tree structure,
+    tuple-of-names leaves): batch rows over 'data', KV heads over 'model',
+    positions replicated. `parallel.sharding.ShardingRules` maps these to
+    mesh axes; docs/sharding.md has the full table."""
+    if cfg.is_mla:
+        return {"ckv": ("batch", None, "kv_lora"),
+                "kpe": ("batch", None, None)}
+    return {"k": ("batch", None, "kv_heads", None),
+            "v": ("batch", None, "kv_heads", None)}
+
+
 # ---------------------------------------------------------------------------
 # Core attention math
 # ---------------------------------------------------------------------------

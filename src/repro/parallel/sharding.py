@@ -103,8 +103,15 @@ def prune_spec(shape, spec: PS, mesh: Mesh) -> PS:
 
     Explicit input shardings (unlike internal GSPMD constraints) must divide
     evenly; uneven dims (25 heads, 2-block quantizer scales, ...) fall back
-    to replication on that dim."""
+    to replication on that dim.
+
+    A mesh axis may shard at most one dim: when a spec names the same axis
+    on two dims (e.g. hand-written PS('model', 'model')), only the first
+    occurrence is kept — same first-dim-wins rule as `ShardingRules.spec`.
+    The duplicate used to survive into the pruned spec, and NamedSharding
+    rejects it only at device_put time with an opaque XLA error."""
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used = set()
     parts = []
     for i, entry in enumerate(spec):
         if entry is None or i >= len(shape):
@@ -114,8 +121,9 @@ def prune_spec(shape, spec: PS, mesh: Mesh) -> PS:
         keep = []
         remaining = shape[i]
         for a in axes:
-            if remaining % sizes[a] == 0:
+            if a not in used and remaining % sizes[a] == 0:
                 keep.append(a)
+                used.add(a)
                 remaining //= sizes[a]
         parts.append(tuple(keep) if len(keep) > 1 else
                      (keep[0] if keep else None))

@@ -249,6 +249,26 @@ def _rank1_tables_f32(design: str):
                 jnp.asarray(fac.v_signed.astype(np.float32)))
 
 
+def k_chunk_plan(k: int, kc: int) -> Tuple[int, int]:
+    """(n_chunks, pad) splitting a K-long contraction into chunks of at
+    most ``kc`` terms: ``n_chunks * kc == k + pad``.
+
+    This is the accumulation-order contract of the rank-factored
+    correction: any f32 partial sum over <= kc terms is an exact integer
+    below 2^24 (core/factor.py derives kc per design from the maximum
+    column sum of |V|), so chunk results cast to int32 losslessly and the
+    int32 chunk accumulation is exact in ANY order. A K-shard of the
+    contraction is a prefix/suffix subset of the terms, so each shard's
+    local chunks obey the same bound and the cross-shard int32 psum is
+    bit-exact by construction (quant/sharded.py; docs/sharding.md).
+    Padding appends zero terms, which contribute exactly 0.
+    """
+    if kc <= 0:
+        raise ValueError(f"chunk size must be positive, got {kc}")
+    chunks = max(1, -(-k // kc))
+    return chunks, chunks * kc - k
+
+
 def rank1_info(design: str) -> Dict:
     """Correction-complexity summary for one design (profiles/bench):
     R (factor count), exact rank, digit planes, f32-exact K bound."""
@@ -289,8 +309,7 @@ def approx_matmul_rank1(x_q, w_q, cfg: QuantConfig) -> jax.Array:
             xf, wf, (((1, 2), (1, 0)), ((), ())),
             preferred_element_type=jnp.float32).astype(jnp.int32)
     else:
-        chunks = -(-k // kc)
-        pad = chunks * kc - k
+        chunks, pad = k_chunk_plan(k, kc)
         xf = jnp.pad(xf, ((0, 0), (0, pad), (0, 0)))
         wf = jnp.pad(wf, ((0, 0), (0, pad), (0, 0)))
         xf = xf.reshape(m, chunks, kc, r)

@@ -9,10 +9,13 @@ Public surface:
   padded_prefill_ok, compiled_fns,
   clear_compiled_fns                     — engine plumbing reused by
                                            benchmarks and the eval runners
+  mesh_compiled_fns                      — sharded prefill/decode +
+                                           storage shardings for
+                                           Engine(mesh=...) (docs/sharding.md)
 """
 from repro.serve.engine import (Engine, FINISH_REASONS, ServeRequest,
                                 clear_compiled_fns, compiled_fns,
-                                padded_prefill_ok)
+                                mesh_compiled_fns, padded_prefill_ok)
 from repro.serve.paging import PagePool, PrefixCache
 from repro.serve.sampling import GREEDY, SamplingConfig, sample_token
 from repro.serve.scheduler import SlotScheduler
@@ -20,4 +23,4 @@ from repro.serve.scheduler import SlotScheduler
 __all__ = ["Engine", "ServeRequest", "FINISH_REASONS", "SamplingConfig",
            "GREEDY", "sample_token", "SlotScheduler", "PagePool",
            "PrefixCache", "compiled_fns", "clear_compiled_fns",
-           "padded_prefill_ok"]
+           "mesh_compiled_fns", "padded_prefill_ok"]

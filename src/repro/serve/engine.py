@@ -46,10 +46,14 @@ from typing import Callable, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
 
 from repro.models import transformer_lm as TLM
 from repro.models.transformer_lm import ArchConfig
-from repro.parallel.sharding import ShardingRules, DEFAULT_RULES
+from repro.nn.module import ParamDesc
+from repro.parallel.sharding import (ShardingRules, DEFAULT_RULES,
+                                     prune_spec)
 from repro.serve.metrics import RequestTiming, summarize
 from repro.serve.paging import PrefixCache
 from repro.serve.sampling import GREEDY, SamplingConfig, sample_token
@@ -95,6 +99,174 @@ def clear_compiled_fns() -> None:
     call this between suites so back-to-back backend sweeps don't
     accumulate live executables)."""
     compiled_fns.cache_clear()
+    mesh_compiled_fns.cache_clear()
+
+
+# ---------------------------------------------------------------------------
+# Engine-over-mesh: sharded storage, bit-exact compute (docs/sharding.md)
+# ---------------------------------------------------------------------------
+#
+# The sharded engine keeps params FSDP/TP-sharded and the KV pool sharded
+# (slot rows over 'data', KV heads over 'model') but computes each step
+# through the UNCHANGED single-device model inside one shard_map:
+#
+#   gather   params are all-gathered in full; cache leaves are gathered
+#            over their 'model' (head) axes only, keeping the slot dim
+#            local. all_gather moves bytes — no arithmetic, so the
+#            reconstructed operands are the single-device values bit for
+#            bit.
+#   compute  each device runs TLM.prefill/decode_step on its local slot
+#            rows. The CACHE evolution is bitwise identical to the solo
+#            decode of those rows (integer matmul cores + element-wise
+#            writes); float LOGITS are only ulp-close — XLA fuses the
+#            float attention/softmax epilogue differently inside the
+#            shard_map program, reassociating last-ulp rounding — and
+#            argmax-identical (asserted in
+#            test_sharded_compiled_fns_parity). The guarantee the served
+#            engine carries is therefore the token-level
+#            batching-invariance contract from PR 4: a request's greedy
+#            tokens are identical no matter which other slots share the
+#            pool, mesh or no mesh — proven per backend in
+#            tests/test_serve.py.
+#   scatter  model-sharded output dims are sliced back to the local shard
+#            by mesh position (a pure slice), so storage stays sharded
+#            between steps.
+#
+# GSPMD auto-partitioning of the full LM is deliberately NOT used here: it
+# reassociates float contractions across shards (K-dim FSDP sums, fused
+# gemm tiling), which breaks bitwise parity. This formulation keeps every
+# float op local and unchanged; the only cross-device ops are exact byte
+# movement. check_rep=False because Pallas backends define no replication
+# rule.
+
+
+def _flat_specs(spec_tree):
+    """Flatten a PartitionSpec tree (PS is a tuple subclass, so plain
+    flatten would explode each spec into its entries)."""
+    return jax.tree.flatten(spec_tree,
+                            is_leaf=lambda x: isinstance(x, PS))[0]
+
+
+def _gather_leaf(x, spec, skip_dim=None):
+    """all_gather a shard_map-local shard back to the full array along
+    every sharded dim of `spec`, minor mesh axis first within a dim so
+    blocks land in their original order. Pure byte movement."""
+    for d, entry in enumerate(spec):
+        if entry is None or d == skip_dim:
+            continue
+        axes = (entry,) if isinstance(entry, str) else tuple(entry)
+        for ax in reversed(axes):
+            x = jax.lax.all_gather(x, ax, axis=d, tiled=True)
+    return x
+
+
+def _slice_leaf(x, spec, sizes, skip_dim=None):
+    """Inverse of `_gather_leaf`: slice this device's shard back out of a
+    full array (major mesh axis first within a dim)."""
+    for d, entry in enumerate(spec):
+        if entry is None or d == skip_dim:
+            continue
+        axes = (entry,) if isinstance(entry, str) else tuple(entry)
+        n = 1
+        idx = jnp.int32(0)
+        for ax in axes:
+            n *= sizes[ax]
+            idx = idx * sizes[ax] + jax.lax.axis_index(ax)
+        loc = x.shape[d] // n
+        x = jax.lax.dynamic_slice_in_dim(x, idx * loc, loc, axis=d)
+    return x
+
+
+def _param_plan(cfg: ArchConfig, rules: ShardingRules, mesh: Mesh):
+    """(treedef, [pruned PartitionSpec]) over the cfg's param tree."""
+    descs = TLM.descs(cfg)
+    is_desc = lambda t: isinstance(t, ParamDesc)  # noqa: E731
+    leaves, treedef = jax.tree.flatten(descs, is_leaf=is_desc)
+    specs = [prune_spec(d.shape, rules.spec(d.logical, mesh), mesh)
+             for d in leaves]
+    return treedef, specs
+
+
+def _tree_shardings(mesh: Mesh, treedef, specs):
+    return jax.tree.unflatten(
+        treedef, [NamedSharding(mesh, s) for s in specs])
+
+
+def _write_slot(pool, one, slot):
+    """Full-row copy of a freshly prefilled batch=1 cache into slot row
+    `slot` of the pool (same update as the single-device admission path;
+    traced `slot` so the jitted mesh version compiles once)."""
+    return jax.tree.map(lambda p, o: p.at[:, slot].set(o[:, 0]), pool, one)
+
+
+@functools.lru_cache(maxsize=8)
+def mesh_compiled_fns(cfg: ArchConfig, rules: ShardingRules, mesh: Mesh,
+                      slots: int, max_len: int, cache_dtype):
+    """Sharded counterpart of :func:`compiled_fns`.
+
+    Returns (prefill, decode, shardings): jitted prefill/decode with the
+    same signatures as the single-device pair, plus the NamedSharding
+    trees ({'params', 'pool'}) the Engine pins its storage to. Cached per
+    (cfg, rules, mesh, slots, max_len, cache_dtype) — Mesh and the frozen
+    dataclasses all hash."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    ptd, pspecs = _param_plan(cfg, rules, mesh)
+    pool = jax.eval_shape(
+        lambda: TLM.init_cache(cfg, slots, max_len, cache_dtype))
+    one = jax.eval_shape(
+        lambda: TLM.init_cache(cfg, 1, max_len, cache_dtype))
+    ctd = jax.tree.structure(pool)
+    pool_specs = _flat_specs(TLM.cache_specs(cfg, pool, rules, mesh))
+    one_specs = _flat_specs(TLM.cache_specs(cfg, one, rules, mesh))
+    # how the pool's slot dim is sharded (None when slots don't divide)
+    bspec = prune_spec((slots,), rules.spec(("batch",), mesh), mesh)
+    slot_ax = bspec[0] if len(bspec) else None
+
+    def gather_params(pflat):
+        return jax.tree.unflatten(
+            ptd, [_gather_leaf(x, s) for x, s in zip(pflat, pspecs)])
+
+    def gather_cache(cflat, specs):
+        # model (head) axes gathered in full; slot dim (1) stays local
+        return jax.tree.unflatten(ctd, [
+            _gather_leaf(x, s, skip_dim=1) for x, s in zip(cflat, specs)])
+
+    def prefill_body(pflat, cflat, toks, lengths, off):
+        logits, new = TLM.prefill(
+            gather_params(pflat), toks, cfg, gather_cache(cflat, one_specs),
+            rules, lengths=lengths, pos_offset=off)
+        return logits, [_slice_leaf(x, s, sizes, skip_dim=1)
+                        for x, s in zip(jax.tree.leaves(new), one_specs)]
+
+    def decode_body(pflat, cflat, tok, pos):
+        logits, new = TLM.decode_step(
+            gather_params(pflat), tok, pos, cfg,
+            gather_cache(cflat, pool_specs), rules)
+        return logits, [_slice_leaf(x, s, sizes, skip_dim=1)
+                        for x, s in zip(jax.tree.leaves(new), pool_specs)]
+
+    sm_prefill = shard_map(
+        prefill_body, mesh=mesh,
+        in_specs=(pspecs, one_specs, PS(None, None), PS(None), PS()),
+        out_specs=(PS(None, None, None), one_specs), check_rep=False)
+    sm_decode = shard_map(
+        decode_body, mesh=mesh,
+        in_specs=(pspecs, pool_specs, PS(slot_ax, None), PS(slot_ax)),
+        out_specs=(PS(slot_ax, None, None), pool_specs), check_rep=False)
+
+    def prefill(p, toks, cache, lengths, off):
+        logits, nf = sm_prefill(jax.tree.leaves(p), jax.tree.leaves(cache),
+                                toks, lengths, off)
+        return logits, jax.tree.unflatten(ctd, nf)
+
+    def decode(p, cache, tok, pos):
+        logits, nf = sm_decode(jax.tree.leaves(p), jax.tree.leaves(cache),
+                               tok, pos)
+        return logits, jax.tree.unflatten(ctd, nf)
+
+    shardings = {"params": _tree_shardings(mesh, ptd, pspecs),
+                 "pool": _tree_shardings(mesh, ctd, pool_specs)}
+    return jax.jit(prefill), jax.jit(decode), shardings
 
 
 def padded_prefill_ok(cfg: ArchConfig) -> bool:
@@ -121,7 +293,8 @@ class Engine:
                  stream: Optional[Callable[[int, int], None]] = None,
                  cache_dtype=jnp.float32,
                  prefix_caching: bool = True, page_size: int = 8,
-                 cache_pages: Optional[int] = None):
+                 cache_pages: Optional[int] = None,
+                 mesh: Optional[Mesh] = None):
         assert not cfg.embed_stub, "serving drives token models"
         self.cfg, self.params, self.rules = cfg, params, rules
         self.slots, self.max_len, self.eos_id = slots, max_len, eos_id
@@ -132,7 +305,21 @@ class Engine:
         self._slot_req: List[Optional[ServeRequest]] = [None] * slots
         self._tok = np.zeros(slots, np.int32)     # next input token per slot
         self._pos = np.zeros(slots, np.int32)     # its absolute position
-        self._prefill, self._decode = compiled_fns(cfg, rules)
+        # a 1-device mesh adds nothing but compile variance — run plain
+        self.mesh = (mesh if mesh is not None and mesh.devices.size > 1
+                     else None)
+        if self.mesh is not None:
+            self._prefill, self._decode, shardings = mesh_compiled_fns(
+                cfg, rules, self.mesh, slots, max_len, cache_dtype)
+            self.params = jax.device_put(self.params, shardings["params"])
+            self.pool = jax.device_put(self.pool, shardings["pool"])
+            # pinned out_shardings: slot writes must not drift the pool's
+            # storage layout between steps
+            self._pool_write = jax.jit(_write_slot,
+                                       out_shardings=shardings["pool"])
+        else:
+            self._prefill, self._decode = compiled_fns(cfg, rules)
+            self._pool_write = None
         self.completed: List[ServeRequest] = []
         self.decode_steps = 0
         self.busy_slot_steps = 0
@@ -148,6 +335,13 @@ class Engine:
             self.prefix = PrefixCache(page_size, n_pages)
             self.pages = TLM.init_page_store(cfg, n_pages, page_size,
                                              cache_dtype)
+            if self.mesh is not None:
+                self._pages_shardings = _tree_shardings(
+                    self.mesh, jax.tree.structure(self.pages),
+                    _flat_specs(TLM.cache_specs(
+                        cfg, self.pages, rules, self.mesh)))
+                self.pages = jax.device_put(self.pages,
+                                            self._pages_shardings)
         self._slot_chain: List[Tuple[int, ...]] = [()] * slots
 
     # ---- request intake --------------------------------------------------
@@ -209,9 +403,11 @@ class Engine:
             self.prefill_tokens += len(suffix)
             # full-row copy: the freed slot inherits nothing from its
             # previous occupant (zero KV-cache leakage on reuse)
-            self.pool = jax.tree.map(
-                lambda pool, one: pool.at[:, slot].set(one[:, 0]),
-                self.pool, fresh)
+            if self._pool_write is not None:
+                self.pool = self._pool_write(self.pool, fresh,
+                                             jnp.int32(slot))
+            else:
+                self.pool = _write_slot(self.pool, fresh, slot)
             self._slot_req[slot] = req
             self._pos[slot] = plen
             if req.max_new <= 0:
@@ -267,6 +463,11 @@ class Engine:
             self.pages = TLM.store_pages(
                 self.pages, self.pool, slot,
                 [p for p, _ in new], [i for _, i in new])
+            if self.mesh is not None:
+                # keep the store's head/page sharding pinned (the eager
+                # scatter above follows GSPMD propagation, not our layout)
+                self.pages = jax.device_put(self.pages,
+                                            self._pages_shardings)
 
     # ---- the serving loop ------------------------------------------------
     def step(self) -> bool:

@@ -1,0 +1,320 @@
+"""Mesh-sharded quantized matmul: per-backend bitwise parity + properties.
+
+The contract under test (quant/sharded.py; docs/sharding.md): for EVERY
+registered backend and every admissible (m, n, k) mesh-axis assignment,
+`sharded_quantized_matmul` — integer core partitioned over a real multi-
+device mesh via shard_map — returns the single-device `quantized_matmul`
+output bit for bit. No tolerances anywhere in this file: assertions are
+exact equality on int32 accumulators and on float outputs.
+
+Also pinned here, per the sharding satellites:
+  * `k_chunk_plan` algebraic properties and the < 2^24 f32-exactness bound
+    verified against every operand-pair extreme of every compressor design
+  * random mesh shape / partition assignment / K-alignment property sweeps
+    (hypothesis shim — deterministic seeded sweeps offline)
+  * mesh + pruned-sharding construction for every registry config
+    (abstract shapes only — nothing is allocated)
+  * `launch.mesh.make_serving_mesh` under the conftest-forced 8 host
+    devices
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+from jax.sharding import PartitionSpec as PS
+
+from repro.configs import registry
+from repro.core import compressors as C
+from repro.core import factor as factorlib
+from repro.launch.mesh import make_serving_mesh
+from repro.models import transformer_lm as TLM
+from repro.nn.module import ParamDesc
+from repro.parallel.sharding import DEFAULT_RULES, prune_spec
+from repro.quant import matmul as QM
+from repro.quant.quantize import abs_max_scale, for_lm, quantize
+from repro.quant.sharded import (k_chunk_plan, shard_plan,
+                                 sharded_integer_matmul,
+                                 sharded_quantized_matmul)
+
+BACKENDS = list(QM.list_backends())
+
+# every admissible way this suite partitions an (M, K) x (K, N) problem
+AXIS_CASES = {
+    "mn": dict(),                                  # M over data, N over model
+    "k": dict(n_axis=None, k_axis="model"),        # K over model (psum path)
+    "mk": dict(k_axis="model"),                    # K + M (n yields to k)
+    "n_only": dict(m_axis=None),
+}
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    m = make_serving_mesh()
+    if m.devices.size < 2:
+        pytest.skip("sharded parity needs >1 device "
+                    "(conftest forces 8 host devices)")
+    return m
+
+
+def _operands(m=16, k=96, n=40, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    return x, w, b
+
+
+def _quantized(x, w):
+    sw = abs_max_scale(w, axis=0, keepdims=True)
+    sx = abs_max_scale(x, axis=-1, keepdims=True)
+    return quantize(x, sx), quantize(w, sw)
+
+
+# ---------------------------------------------------------------------------
+# Per-backend bitwise parity: float wrapper and integer core
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_float_parity_all_axis_assignments(mesh, backend):
+    x, w, b = _operands()
+    cfg = for_lm(backend)    # per-token scales + fused epilogue where defined
+    ref = QM.quantized_matmul(x, w, cfg, b, "relu")
+    for label, axes in AXIS_CASES.items():
+        out = sharded_quantized_matmul(x, w, cfg, mesh, b, "relu", **axes)
+        assert (out == ref).all(), f"{backend}/{label} diverged bitwise"
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_integer_core_parity(mesh, backend):
+    # accumulator-level identity: the pre-dequant int32 contract
+    x, w, _ = _operands()
+    cfg = for_lm(backend)
+    x_q, w_q = _quantized(x, w)
+    ref = QM.integer_matmul(x_q, w_q, cfg)
+    for label, axes in AXIS_CASES.items():
+        out = sharded_integer_matmul(x_q, w_q, cfg, mesh, **axes)
+        assert (out == ref).all(), f"{backend}/{label} int32 accumulators"
+
+
+@pytest.mark.parametrize("backend", ["int8_exact", "approx_deficit",
+                                     "approx_rank1"])
+def test_per_tensor_scale_parity(mesh, backend):
+    # per-tensor activation scale (training-style config): scalar sx is a
+    # global max — order-invariant — so sharding stays bitwise
+    x, w, b = _operands(seed=7)
+    cfg = dataclasses.replace(for_lm(backend), act_scale="per_tensor")
+    ref = QM.quantized_matmul(x, w, cfg, b, None)
+    out = sharded_quantized_matmul(x, w, cfg, mesh, b, None,
+                                   k_axis="model", n_axis=None)
+    assert (out == ref).all()
+
+
+def test_batched_leading_dims(mesh):
+    # (B, T, K) inputs flatten to rows exactly like quantized_matmul
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(4, 8, 96)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(96, 40)).astype(np.float32))
+    cfg = for_lm("approx_deficit")
+    ref = QM.quantized_matmul(x, w, cfg)
+    out = sharded_quantized_matmul(x, w, cfg, mesh)
+    assert out.shape == (4, 8, 40) and (out == ref).all()
+
+
+def test_rank1_kshard_crosses_chunk_boundary(mesh):
+    """K > k_exact_f32 both globally and per shard: the rank-R correction
+    GEMM chunks at the < 2^24 boundary on every K-shard independently, and
+    the int32 psum of per-shard chunk sums must still be the single-device
+    accumulator bit for bit (the 'exact by construction' claim)."""
+    kc = factorlib.factorize("proposed").k_exact_f32
+    n_model = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    k = n_model * (kc + 17)           # per-shard K = kc + 17 still chunks
+    rng = np.random.default_rng(11)
+    x_q = jnp.asarray(rng.integers(-127, 128, (4, k)).astype(np.int8))
+    w_q = jnp.asarray(rng.integers(-127, 128, (k, 8)).astype(np.int8))
+    cfg = for_lm("approx_rank1")
+    ref = QM.integer_matmul(x_q, w_q, cfg)
+    out = sharded_integer_matmul(x_q, w_q, cfg, mesh,
+                                 n_axis=None, k_axis="model")
+    assert (out == ref).all()
+    # and the lut oracle agrees (rank1 is bit-exact to the LUT table)
+    oracle = QM.integer_matmul(x_q, w_q, for_lm("approx_lut"))
+    assert (out == oracle).all()
+
+
+# ---------------------------------------------------------------------------
+# shard_plan resolution rules
+# ---------------------------------------------------------------------------
+
+def test_shard_plan_non_dividing_falls_back(mesh):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    nm = sizes["model"]
+    # K prime w.r.t. the model axis -> replicated, others keep their axes
+    m_ax, n_ax, k_ax = shard_plan(16, nm * 7 + 1, nm * 4, mesh,
+                                  k_axis="model", n_axis="model")
+    assert k_ax is None and n_ax == "model"
+
+
+def test_shard_plan_one_axis_one_dim(mesh):
+    # the same mesh axis cannot shard two dims: k wins over n, m yields
+    m_ax, n_ax, k_ax = shard_plan(16, 96, 40, mesh,
+                                  m_axis="model", n_axis="model",
+                                  k_axis="model")
+    assert k_ax == "model" and n_ax is None and m_ax is None
+
+
+def test_shard_plan_absent_axis(mesh):
+    m_ax, n_ax, k_ax = shard_plan(16, 96, 40, mesh, m_axis="nonexistent")
+    assert m_ax is None
+
+
+def test_unknown_activation_raises(mesh):
+    x, w, _ = _operands()
+    with pytest.raises(ValueError):
+        sharded_quantized_matmul(x, w, for_lm("int8_exact"), mesh,
+                                 activation="gelu")
+
+
+def test_single_device_mesh_falls_back():
+    x, w, b = _operands()
+    cfg = for_lm("approx_deficit")
+    one = make_serving_mesh(shape=(1, 1))
+    ref = QM.quantized_matmul(x, w, cfg, b)
+    assert (sharded_quantized_matmul(x, w, cfg, one, b) == ref).all()
+    assert (sharded_quantized_matmul(x, w, cfg, None, b) == ref).all()
+
+
+# ---------------------------------------------------------------------------
+# k_chunk_plan: algebra + the < 2^24 exactness bound at every extreme
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 5000), st.integers(1, 700))
+def test_k_chunk_plan_properties(k, kc):
+    chunks, pad = k_chunk_plan(k, kc)
+    assert chunks >= 1 and 0 <= pad < kc
+    assert chunks * kc == k + pad          # exact cover
+    assert (chunks - 1) * kc < k           # minimal chunk count
+
+
+def test_k_chunk_plan_rejects_nonpositive():
+    with pytest.raises(ValueError):
+        k_chunk_plan(128, 0)
+    with pytest.raises(ValueError):
+        k_chunk_plan(128, -3)
+
+
+@pytest.mark.parametrize("design", sorted(C.DESIGNS))
+def test_k_exact_bound_all_operand_extremes(design):
+    """k_exact_f32 * (worst per-pair correction magnitude) < 2^24 for every
+    one of the 2^16 signed operand pairs — sign-magnitude products reduce
+    to the magnitude grid, so W = U @ |V| covers them all — and the bound
+    is tight: one more term can overflow the f32-exact integer range."""
+    fac = factorlib.factorize(design)
+    kc = fac.k_exact_f32
+    assert set(np.unique(fac.U)) <= {0, 1}
+    w_pair = fac.U.astype(np.int64) @ np.abs(fac.V).astype(np.int64)
+    assert kc * int(w_pair.max()) < 2 ** 24
+    col_sum = int(np.abs(fac.V).sum(axis=0).max()) if fac.V.size else 0
+    if col_sum:     # tightness: kc is the largest K the bound certifies
+        assert (kc + 1) * col_sum >= 2 ** 24
+
+
+# ---------------------------------------------------------------------------
+# Property sweeps: random mesh shapes, partition specs, K alignments
+# ---------------------------------------------------------------------------
+
+_MESH_SHAPES = [(1, 2), (2, 2), (2, 4), (4, 2), (1, 8), (8, 1), (2, 3)]
+_PROP_BACKENDS = ["int8_exact", "approx_deficit", "approx_stage1_fused",
+                  "approx_rank1"]
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_random_mesh_and_partition_parity(seed):
+    if jax.device_count() < 2:
+        pytest.skip("needs multiple devices")
+    rng = np.random.default_rng(seed)
+    shapes = [s for s in _MESH_SHAPES
+              if s[0] * s[1] <= jax.device_count()]
+    mesh = make_serving_mesh(shape=shapes[rng.integers(len(shapes))])
+    m = int(rng.integers(1, 33))
+    k = int(rng.integers(1, 129))        # any alignment vs mesh axes
+    n = int(rng.integers(1, 65))
+    backend = _PROP_BACKENDS[rng.integers(len(_PROP_BACKENDS))]
+    axes = list(AXIS_CASES.values())[rng.integers(len(AXIS_CASES))]
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    cfg = for_lm(backend)
+    ref = QM.quantized_matmul(x, w, cfg)
+    out = sharded_quantized_matmul(x, w, cfg, mesh, **axes)
+    assert (out == ref).all(), (seed, mesh.devices.shape, (m, k, n),
+                                backend, axes)
+
+
+# ---------------------------------------------------------------------------
+# Mesh + pruned shardings for every registry config (abstract — no arrays)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", registry.ARCH_NAMES)
+def test_registry_config_shardings_construct(name):
+    """Every config's param tree and serving cache admit pruned shardings
+    on the serving mesh: specs build, every kept axis divides its dim, and
+    cache_logical stays in lockstep with init_cache (the zip assert)."""
+    mesh = make_serving_mesh()
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    cfg = registry.reduced(name)
+
+    def check(spec, shape):
+        for i, entry in enumerate(spec):
+            if entry is None:
+                continue
+            axes = (entry,) if isinstance(entry, str) else entry
+            total = 1
+            for a in axes:
+                total *= sizes[a]
+            assert shape[i] % total == 0, (name, shape, spec)
+
+    descs = TLM.descs(cfg)
+    is_desc = lambda t: isinstance(t, ParamDesc)  # noqa: E731
+    for d in jax.tree.leaves(descs, is_leaf=is_desc):
+        check(prune_spec(d.shape, DEFAULT_RULES.spec(d.logical, mesh), mesh),
+              d.shape)
+    cache = jax.eval_shape(lambda: TLM.init_cache(cfg, 8, 64, jnp.float32))
+    spec_tree = TLM.cache_specs(cfg, cache, DEFAULT_RULES, mesh)
+    flat_c = jax.tree.leaves(cache)
+    flat_s = jax.tree.flatten(spec_tree,
+                              is_leaf=lambda x: isinstance(x, PS))[0]
+    assert len(flat_c) == len(flat_s)
+    for leaf, spec in zip(flat_c, flat_s):
+        check(spec, leaf.shape)
+
+
+# ---------------------------------------------------------------------------
+# make_serving_mesh under the conftest-forced 8 host devices
+# ---------------------------------------------------------------------------
+
+def test_serving_mesh_default_shape():
+    m = make_serving_mesh()
+    n = jax.device_count()
+    assert m.axis_names == ("data", "model")
+    assert m.devices.size == n
+    if n == 8:
+        assert m.devices.shape == (2, 4)   # the CI serving mesh
+
+
+def test_serving_mesh_explicit_shape():
+    if jax.device_count() < 8:
+        pytest.skip("needs the forced 8-device host platform")
+    m = make_serving_mesh(shape=(4, 2))
+    assert m.devices.shape == (4, 2)
+    m3 = make_serving_mesh(shape=(2, 2, 2),
+                           axis_names=("pod", "data", "model"))
+    assert m3.devices.shape == (2, 2, 2)
+
+
+def test_serving_mesh_too_many_devices_raises():
+    with pytest.raises(ValueError):
+        make_serving_mesh(shape=(jax.device_count() + 1, 1))

@@ -60,3 +60,115 @@ def test_seq_parallel_variant(mesh):
     from repro.parallel.sharding import SEQ_PARALLEL_RULES
     sp = SEQ_PARALLEL_RULES.spec(("batch", "seq"), mesh)
     assert sp == PS("data", "model")
+
+
+# ---------------------------------------------------------------------------
+# prune_spec on a real multi-device mesh (conftest forces 8 host devices)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def mesh24():
+    if jax.device_count() < 8:
+        pytest.skip("needs 8 forced host devices (see conftest.py)")
+    return jax.make_mesh((2, 4), ("data", "model"))
+
+
+def _mesh_sizes(m):
+    return dict(zip(m.axis_names, m.devices.shape))
+
+
+def _spec_axis_uses(spec):
+    """Flat list of mesh-axis occurrences across all dims of a spec."""
+    out = []
+    for entry in spec:
+        if entry is None:
+            continue
+        out.extend((entry,) if isinstance(entry, str) else entry)
+    return out
+
+
+def test_prune_spec_duplicate_axis_regression(mesh24):
+    # THE regression: a spec naming the same mesh axis on two dims (easy to
+    # hand-write) used to survive pruning and only blow up at device_put
+    # with an opaque XLA error. Only the first occurrence may be kept.
+    pruned = prune_spec((8, 8), PS("model", "model"), mesh24)
+    assert pruned == PS("model")
+    # and the pruned spec must actually be placeable
+    x = np.zeros((8, 8), np.float32)
+    jax.device_put(x, jax.sharding.NamedSharding(mesh24, pruned))
+    # duplicates hiding inside tuple entries are caught too
+    pruned = prune_spec((8, 8), PS(("data", "model"), "model"), mesh24)
+    assert pruned == PS(("data", "model"))
+    assert _spec_axis_uses(pruned).count("model") == 1
+
+
+def test_prune_spec_partial_tuple_keep(mesh24):
+    # dim 4 on ('data','model') = (2,4): data divides (4 -> 2), then model
+    # (size 4) does not divide the remaining 2 -> only 'data' kept
+    assert prune_spec((4,), PS(("data", "model")), mesh24) == PS("data")
+    # dim 8 keeps both (8 / 2 / 4 == 1)
+    assert prune_spec((8,), PS(("data", "model")), mesh24) == \
+        PS(("data", "model"))
+
+
+def test_prune_spec_trivial_mesh_is_noop(mesh):
+    # 1-sized mesh axes always divide: pruning changes nothing but
+    # normalizing away trailing Nones (the "no-mesh no-op" half of the
+    # contract)
+    for spec in (PS("data", "model"), PS(("data", "model"), None),
+                 PS(None, "model")):
+        pruned = prune_spec((3, 5), spec, mesh)
+        assert tuple(pruned) == tuple(spec)[:len(pruned)]
+        assert all(e is None for e in tuple(spec)[len(pruned):])
+
+
+_SPEC_MENU = [None, "data", "model", ("data", "model"), ("model", "data")]
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(0, len(_SPEC_MENU) * 64 - 1),
+                min_size=1, max_size=4))
+def test_prune_spec_divides_and_never_reuses_axes(seeds):
+    # each seed encodes (spec entry, dim) for one dimension
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    sizes = _mesh_sizes(mesh)
+    dims = tuple(s // len(_SPEC_MENU) + 1 for s in seeds)
+    spec = PS(*[_SPEC_MENU[s % len(_SPEC_MENU)] for s in seeds])
+    pruned = prune_spec(dims, spec, mesh)
+    uses = _spec_axis_uses(pruned)
+    assert len(uses) == len(set(uses)), "mesh axis sharded two dims"
+    for i, entry in enumerate(pruned):
+        if entry is None:
+            continue
+        axes = (entry,) if isinstance(entry, str) else entry
+        total = 1
+        for a in axes:
+            total *= sizes[a]
+        assert dims[i] % total == 0
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(0, len(_SPEC_MENU) * 64 - 1),
+                min_size=1, max_size=4))
+def test_prune_spec_idempotent(seeds):
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    dims = tuple(s // len(_SPEC_MENU) + 1 for s in seeds)
+    spec = PS(*[_SPEC_MENU[s % len(_SPEC_MENU)] for s in seeds])
+    once = prune_spec(dims, spec, mesh)
+    assert prune_spec(dims, once, mesh) == once
+
+
+_LOGICAL_MENU = [None, "batch", "heads", "kv_heads", "mlp", "vocab",
+                 "experts", "fsdp", "layers", "seq"]
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(0, len(_LOGICAL_MENU) - 1),
+                min_size=1, max_size=5))
+def test_rules_spec_uses_each_mesh_axis_at_most_once(idx):
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    logical = tuple(_LOGICAL_MENU[i] for i in idx)
+    sp = DEFAULT_RULES.spec(logical, mesh)
+    uses = _spec_axis_uses(sp)
+    assert len(uses) == len(set(uses)), (logical, sp)
+    assert set(uses) <= set(mesh.axis_names)
