@@ -18,6 +18,12 @@ artifact schema as the eval suites; wall-times are CPU reference numbers,
                acceptance check is prefill_tokens (and prefill count)
                dropping monotonically-ish with share while us_per_call
                stays flat (cache bookkeeping must not tax the decode loop).
+  spec         speculative decoding (policy='spec'): window K x offered
+               load with a bf16 draft. Served tokens are bitwise the
+               sequential engine's (the acceptance contract,
+               tests/test_speculative.py), so the sweep only reports
+               throughput: acceptance length, committed tokens per verify
+               pass, and tok/s against the continuous row at the same load.
 
 Run directly (CI serve-smoke job):
     PYTHONPATH=src:. python benchmarks/serve_perf.py --smoke
@@ -67,10 +73,11 @@ def _prefix_workload(n_req: int, vocab: int, seed: int, share: float,
 
 
 def _serve(cfg, params, reqs, policy: str, slots: int, max_len: int,
-           prefix_caching: bool = False, mesh=None) -> Dict:
+           prefix_caching: bool = False, mesh=None, spec=None) -> Dict:
     from repro.serve import Engine, ServeRequest
     eng = Engine(cfg, params, slots=slots, max_len=max_len,
-                 admission=policy, prefix_caching=prefix_caching, mesh=mesh)
+                 admission=policy, prefix_caching=prefix_caching, mesh=mesh,
+                 spec=spec)
     for rid, prompt, max_new in reqs:
         eng.submit(ServeRequest(rid=rid, prompt=prompt, max_new=max_new))
     return eng.run()
@@ -96,12 +103,16 @@ def run(quick: bool = True) -> List[Dict]:
         backends = ("bf16", "approx_deficit")
         loads = (slots, 4 * slots)
         shares = (0.0, 0.5, 1.0)
+        spec_ks = (2, 4)
+        spec_loads = (4 * slots,)
     else:
         slots, max_len = 4, 64
         backends = ("bf16", "int8_exact", "approx_deficit",
                     "approx_stage1_fused")
         loads = (slots, 2 * slots, 4 * slots, 8 * slots)
         shares = (0.0, 0.25, 0.5, 0.75, 1.0)
+        spec_ks = (2, 4, 8)
+        spec_loads = (slots, 4 * slots)
 
     rows: List[Dict] = []
     for backend in backends:
@@ -166,6 +177,44 @@ def run(quick: bool = True) -> List[Dict]:
                   f"share={share:.2f} hit={st['prefix_hit_rate']:.2f} "
                   f"prefill_tok={st['prefill_tokens']:4d} "
                   f"{st['tok_per_s']:8.1f} tok/s")
+        # -- speculative sweep: window K x offered load, bf16 draft on the
+        #    target params (serve/speculative.py). Tokens are bitwise the
+        #    sequential engine's (tests/test_speculative.py), so the only
+        #    bench question is throughput: spec_accept_mean says how many
+        #    drafts each verify pass landed, us_per_call (per verify pass,
+        #    a width-K call) is the gate-checked rate, and tok/s vs the
+        #    continuous row at the same load is the amortization headline.
+        #    bf16 spec rows exist at every point, so the gate's in-cell
+        #    normalization covers these rows too. -------------------------
+        from repro.serve import SpecConfig
+        for spec_k in spec_ks:
+            for offered in spec_loads:
+                reqs = _workload(offered, cfg0.vocab, seed=offered)
+                st = max((_serve(cfg, params, reqs, "continuous", slots,
+                                 max_len,
+                                 spec=SpecConfig(k=spec_k,
+                                                 draft_backend="bf16"))
+                          for _ in range(2)), key=lambda s: s["tok_per_s"])
+                rows.append({"backend": backend, "policy": "spec",
+                             "offered": offered, "slots": slots,
+                             "share": -1.0, "spec_k": spec_k,
+                             "requests": st["requests"],
+                             "new_tokens": st["new_tokens"],
+                             "decode_steps": st["decode_steps"],
+                             "spec_passes": st["spec_passes"],
+                             "spec_committed": st["spec_committed"],
+                             "spec_accept_mean": round(
+                                 st["spec_accept_mean"], 3),
+                             "spec_accept_rate": round(
+                                 st["spec_accept_rate"], 4),
+                             "tok_per_s": round(st["tok_per_s"], 2),
+                             "us_per_call": round(_us_per_call(st), 2),
+                             "occupancy": round(st["occupancy"], 4)})
+                print(f"serve_perf: {backend:16s} spec       "
+                      f"K={spec_k} offered={offered:3d} "
+                      f"accept={st['spec_accept_mean']:.2f} "
+                      f"{st['tok_per_s']:8.1f} tok/s")
+
         # -- sharded engine: the same continuous workload through
         #    Engine(mesh=...) (docs/sharding.md). Keyed policy='sharded' so
         #    the gate normalizes against the sharded bf16 row in the same
@@ -211,7 +260,9 @@ def artifact(rows: List[Dict], quick: bool) -> Dict:
          "act_scale": "per_token", "page_size": PAGE,
          "note": "CPU reference wall-times; scheduling rows run with "
                  "prefix caching off (policy-only gap), cached rows sweep "
-                 "the shared-prefix fraction with caching on; sharded "
+                 "the shared-prefix fraction with caching on; spec rows "
+                 "sweep the speculative window K with a bf16 draft "
+                 "(policy='spec', us_per_call is per verify pass); sharded "
                  "rows run the same engine over the forced-host-device "
                  "mesh (policy='sharded', normalized in-cell vs bf16)"})
 
@@ -245,6 +296,13 @@ def summarize(rows: List[Dict]) -> str:
         hit = max(r["hit_rate"] for r in cached)
         lines.append(f"prefix cache at share {lo:.2f}->{hi:.2f}: prefill "
                      f"tokens {cold}->{warm}, peak hit rate {hit:.2f}")
+    spec = [r for r in rows if r["policy"] == "spec"]
+    if spec:
+        ks = sorted({r["spec_k"] for r in spec})
+        best = max(r["spec_accept_mean"] for r in spec)
+        lines.append(f"speculative K={ks}: peak acceptance "
+                     f"{best:.2f} drafts/pass over {len(spec)} "
+                     "(backend, K, load) points")
     return "\n".join(lines)
 
 

@@ -9,6 +9,8 @@ batch-synchronous baseline for comparison (docs/serving.md).
 
 Run:  PYTHONPATH=src python examples/serve_lm.py [--backend approx_lut]
       PYTHONPATH=src python examples/serve_lm.py --sampling top_k --top-k 8
+      PYTHONPATH=src python examples/serve_lm.py --spec-k 4 \
+        --draft-backend approx_stage1       # speculative, tokens unchanged
       XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/serve_lm.py --mesh data,model
 """
@@ -45,6 +47,14 @@ ap.add_argument("--no-prefix-cache", action="store_true",
                 help="disable the paged KV prefix cache")
 ap.add_argument("--stream", action="store_true",
                 help="print tokens as they are emitted")
+ap.add_argument("--spec-k", type=int, default=0, metavar="K",
+                help="speculative decoding with a K-wide verify window "
+                     "(serve/speculative.py) — served tokens are bitwise "
+                     "identical to sequential decode, only the number of "
+                     "passes changes; 0 disables")
+ap.add_argument("--draft-backend", default="bf16",
+                choices=["bf16", *list_backends()],
+                help="backend the draft model proposes on (same params)")
 ap.add_argument("--mesh", default=None, metavar="AXES",
                 help="run the engine over a device mesh (docs/sharding.md): "
                      "comma-separated axis names, e.g. 'data,model' splits "
@@ -67,9 +77,13 @@ if args.mesh:
         axis_names=tuple(a.strip() for a in args.mesh.split(",")))
     print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))} over "
           f"{mesh.devices.size} device(s)")
+spec = None
+if args.spec_k > 0:
+    from repro.serve import SpecConfig
+    spec = SpecConfig(k=args.spec_k, draft_backend=args.draft_backend)
 eng = Engine(cfg, params, slots=args.slots, max_len=64,
              admission=args.policy, stream=stream,
-             prefix_caching=not args.no_prefix_cache, mesh=mesh)
+             prefix_caching=not args.no_prefix_cache, mesh=mesh, spec=spec)
 rng = np.random.default_rng(args.seed)
 shared = rng.integers(0, cfg.vocab, args.shared_prefix).astype(np.int32)
 for rid in range(args.requests):
@@ -95,3 +109,10 @@ print(f"backend={args.backend} policy={args.policy}: "
       f"({stats['prefix_hit_tokens']} of "
       f"{stats['prefix_hit_tokens'] + stats['prefill_tokens']} prompt "
       f"tokens from cache)")
+if spec is not None:
+    print(f"speculative K={args.spec_k} draft={args.draft_backend}: "
+          f"{stats['spec_passes']} verify passes, "
+          f"{stats['spec_committed']} committed "
+          f"({stats['spec_accept_mean']:.2f} drafts accepted/pass, "
+          f"hist {stats['spec_accept_hist']}) — tokens bitwise identical "
+          f"to --spec-k 0")

@@ -50,9 +50,10 @@ DEFAULT_BASE = "int8_exact"
 
 
 def _rows(results: dict, only: set | None):
-    """(suite, backend, m, k, n, policy, offered, share) -> us_per_call
-    for every timed row. Kernel rows carry shape in (m, k, n); serve rows
-    carry their sweep point in (policy, offered, share) — unused
+    """(suite, backend, m, k, n, policy, offered, share, spec_k) ->
+    us_per_call for every timed row. Kernel rows carry shape in (m, k, n);
+    serve rows carry their sweep point in (policy, offered, share) plus
+    the speculative window spec_k (0 on non-speculative rows) — unused
     components sit at their defaults so kernel keys are unchanged."""
     out = {}
     for suite, rows in results.items():
@@ -67,7 +68,7 @@ def _rows(results: dict, only: set | None):
             key = (suite, row.get("backend", row.get("name", "?")),
                    row.get("m", 0), row.get("k", 0), row.get("n", 0),
                    row.get("policy", ""), row.get("offered", 0),
-                   row.get("share", -1))
+                   row.get("share", -1), row.get("spec_k", 0))
             out[key] = float(us)
     return out
 

@@ -271,7 +271,9 @@ SUITES: Dict[str, Suite] = {
              ("hit_rate", "prefix hit rate", ".3f"),
              ("solo_match", "solo == batched", None),
              ("match_bf16", "tokens == bf16 %", ".2f"),
-             ("prefix_bf16", "shared prefix (tok)", ".2f")),
+             ("prefix_bf16", "shared prefix (tok)", ".2f"),
+             ("spec_match", "spec == sequential", None),
+             ("spec_accept", "accepted drafts/pass", ".2f")),
             "Mixed-length workload behind a shared system prefix (more "
             "requests than slots; the last request is admitted mid-decode "
             "into a reused slot on a prefix-cache hit) served by the "
@@ -282,8 +284,13 @@ SUITES: Dict[str, Suite] = {
             "bitwise batching + cache-hit invariance contract (exhaustive "
             "per-backend proof in tests/test_serve.py); the bf16 columns "
             "measure where approximate accumulators first flip a greedy "
-            "argmax. Params are random-init — this scores the serving "
-            "path, not task quality (see suite `lm`). Throughput lives in "
+            "argmax; `spec == sequential` re-serves the workload with "
+            "speculative decoding (K=4, approx_stage1 draft) and checks "
+            "the bitwise acceptance contract (serve/speculative.py, "
+            "exhaustive proof in tests/test_speculative.py), with "
+            "`accepted drafts/pass` the mean acceptance length. Params "
+            "are random-init — this scores the serving path, not task "
+            "quality (see suite `lm`). Throughput lives in "
             "benchmarks/serve_perf.py -> experiments/bench_serve.json.")},
         doc="continuous-batching serving parity backend sweep"),
 }

@@ -24,6 +24,16 @@ Reported per backend:
   prefix_bf16  mean shared-prefix length with the bf16 serve — how many
                tokens survive before approximate accumulators flip an
                argmax
+  spec_match   True iff re-serving the identical workload with speculative
+               decoding on (K=4, approx_stage1 draft) emits bitwise the
+               same tokens as this backend's sequential serve — the
+               acceptance contract (serve/speculative.py), proved per
+               backend/K/draft in tests/test_speculative.py and
+               spot-checked here inside the artifact trail
+  spec_accept  mean accepted drafts per verify pass in that speculative
+               serve (backend-dependent: the draft disagrees with the
+               target exactly where approximate accumulators flip an
+               argmax)
 
 Params are randomly initialized: the suite measures divergence onset on the
 serving path, not task quality (that is the `lm` suite's job). Wall-clock
@@ -61,11 +71,11 @@ def workload(vocab: int, smoke: bool, seed: int):
     return reqs, slots, max_len
 
 
-def serve_outputs(cfg, params, reqs, slots: int,
-                  max_len: int) -> Tuple[Dict[int, List[int]], Dict]:
+def serve_outputs(cfg, params, reqs, slots: int, max_len: int,
+                  spec=None) -> Tuple[Dict[int, List[int]], Dict]:
     """Serve `reqs` through a continuous engine -> ({rid: tokens}, stats)."""
     from repro.serve import Engine, ServeRequest
-    eng = Engine(cfg, params, slots=slots, max_len=max_len)
+    eng = Engine(cfg, params, slots=slots, max_len=max_len, spec=spec)
     for rid, prompt, max_new in reqs:
         eng.submit(ServeRequest(rid=rid, prompt=prompt, max_new=max_new))
     stats = eng.run()
@@ -102,7 +112,8 @@ def run(smoke: bool = False, seed: int = 0) -> Dict:
     from repro.eval.runners import _base_config, sweep_points
     from repro.models import transformer_lm as TLM
     from repro.quant.quantize import for_lm
-    from repro.serve import Engine, ServeRequest, clear_compiled_fns
+    from repro.serve import (Engine, ServeRequest, SpecConfig,
+                             clear_compiled_fns)
 
     cfg0 = LM.arch(smoke)
     params = TLM.init(cfg0, jax.random.PRNGKey(seed))
@@ -130,6 +141,11 @@ def run(smoke: bool = False, seed: int = 0) -> Dict:
                                      max_new=probe[2]))
         solo_eng.run()
         solo = list(solo_eng.completed[0].output)
+        # the same workload with speculation on: the acceptance contract
+        # says the tokens are bitwise this backend's sequential serve
+        spec_outs, spec_stats = serve_outputs(
+            cfg, params, reqs, slots, max_len,
+            spec=SpecConfig(k=4, draft_backend="approx_stage1"))
         match_pct, prefix = _parity(outs, ref)
         rows.append({
             "backend": label,
@@ -139,6 +155,8 @@ def run(smoke: bool = False, seed: int = 0) -> Dict:
             "solo_match": bool(solo == outs[probe[0]]),
             "match_bf16": round(match_pct, 2),
             "prefix_bf16": round(prefix, 2),
+            "spec_match": bool(spec_outs == outs),
+            "spec_accept": round(spec_stats["spec_accept_mean"], 2),
         })
     clear_compiled_fns()   # don't pin this sweep's executables past the suite
 

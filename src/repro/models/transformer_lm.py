@@ -477,6 +477,58 @@ def decode_step(params, token, pos, cfg: ArchConfig, caches,
     return lm_logits(params, h, cfg), caches
 
 
+def verify_step(params, window, pos, cfg: ArchConfig, caches,
+                rules: ShardingRules = DEFAULT_RULES, enc=None):
+    """One speculative verify pass: a (B, K) token window per cache row.
+
+    ``window[b]`` holds the row's committed next-input token followed by
+    K-1 draft proposals; ``pos`` is the (B,) position of ``window[:, 0]``,
+    so row b's tokens sit at absolute positions ``pos[b] + [0, K)``
+    (nn/attention builds exactly that query-position grid and masks
+    causally by absolute distance). Logits row j is the model's next-token
+    distribution after consuming ``window[:, :j+1]`` — bitwise identical
+    to the j-th sequential :func:`decode_step` over the same tokens, for
+    every registered backend (the per-token dequant order is pinned
+    shape-stable in quant/matmul; tests/test_speculative.py proves the
+    composition). KV for all K window positions is written to the cache;
+    the caller must erase positions past the accepted frontier with
+    :func:`rollback_positions` before the next step.
+
+    This is :func:`decode_step` at width K — one function, one compiled
+    body per width, no drift between the verify and decode paths.
+    """
+    return decode_step(params, window, pos, cfg, caches, rules, enc)
+
+
+def rollback_positions(caches, start, stop):
+    """Zero cache positions ``[start[b], stop[b])`` of every row b.
+
+    The speculative un-commit: a verify pass writes KV for the whole
+    (B, K) window, and rejected suffix positions must be erased so the
+    pool row is bitwise identical to the sequential-decode row (freshly
+    initialized caches are zero, so "erased" and "never written" are the
+    same state — the invariant tests/test_speculative.py checks leaf by
+    leaf). Only position-indexed cache layouts are rollback-able (every
+    leaf is (rep, batch, max_len, ...) — the same
+    ``serve.padded_prefill_ok`` predicate that gates paging gates
+    speculation); SSM states fold tokens in irreversibly.
+
+    start/stop: (B,) int32 position bounds per row (start >= stop is a
+    no-op for that row). Pure masking — no float arithmetic, so it is
+    exact under any backend, jit, or shard_map.
+    """
+    start = jnp.asarray(start, jnp.int32)
+    stop = jnp.asarray(stop, jnp.int32)
+
+    def leaf(x):
+        p = jnp.arange(x.shape[2], dtype=jnp.int32)
+        drop = (p[None, :] >= start[:, None]) & (p[None, :] < stop[:, None])
+        shape = (1, x.shape[1], x.shape[2]) + (1,) * (x.ndim - 3)
+        return jnp.where(drop.reshape(shape), jnp.zeros((), x.dtype), x)
+
+    return jax.tree.map(leaf, caches)
+
+
 # ---------------------------------------------------------------------------
 # Paged cache indirection (repro.serve page pool — see docs/serving.md)
 # ---------------------------------------------------------------------------

@@ -526,6 +526,22 @@ def _float_epilogue(y, bias, activation):
     return y
 
 
+def _pin(y):
+    """Pin a float intermediate against XLA's algebraic simplifier.
+
+    The per-token dequant is a broadcast multiply chain
+    ``acc * sw * sx`` whose rounding depends on association order, and
+    under jit XLA picks that order per *shape* — the same activation row
+    can dequantize to different last-ulp floats in a (slots, 1) decode
+    step vs a (slots, K) verify window. Integer accumulators, int8
+    codes, and scales are bitwise shape-stable; only this epilogue was
+    not. Barriers fix the order (weight scale, then row scale, then
+    bias/activation) at every shape, which is what lets speculative
+    verify windows be bitwise identical to sequential decode
+    (serve/speculative.py, tests/test_speculative.py)."""
+    return jax.lax.optimization_barrier(y)
+
+
 def _qmm_forward(x, w, bias, cfg: QuantConfig, activation):
     """Shared quantize -> backend -> dequant/epilogue composition.
 
@@ -569,7 +585,7 @@ def _qmm_forward(x, w, bias, cfg: QuantConfig, activation):
                 jnp.asarray(sw, jnp.float32).reshape(1, -1), (1, n))
             y = backend.fused(x_q, w_q, cfg, scale,
                               jnp.zeros((1, n), jnp.float32), False)
-            y = _float_epilogue(y * sx, bias, activation)
+            y = _float_epilogue(_pin(_pin(y) * sx), bias, activation)
         else:
             sx = abs_max_scale(x3, axis=None, keepdims=False)
             x_q = quantize(x3, sx)
@@ -583,7 +599,12 @@ def _qmm_forward(x, w, bias, cfg: QuantConfig, activation):
         sx = abs_max_scale(x2, axis=-1 if per_token else None,
                            keepdims=per_token)   # (M, 1) | scalar
         x_q = quantize(x2, sx)
-        y = backend.fn(x_q, w_q, cfg).astype(jnp.float32) * (sx * sw)
+        acc = backend.fn(x_q, w_q, cfg).astype(jnp.float32)
+        if per_token:
+            # pinned order: weight scale, then row scale (see _pin)
+            y = _pin(_pin(acc * sw) * sx)
+        else:
+            y = acc * (sx * sw)
         y = _float_epilogue(y, bias, activation)
     return y.reshape(*lead, n).astype(x.dtype)
 

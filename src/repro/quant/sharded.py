@@ -39,8 +39,8 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as PS
 
-from repro.quant.matmul import (_resolve_backend, k_chunk_plan,  # noqa: F401
-                                quantized_matmul)
+from repro.quant.matmul import (_pin, _resolve_backend,  # noqa: F401
+                                k_chunk_plan, quantized_matmul)
 from repro.quant.quantize import QuantConfig, abs_max_scale, quantize
 
 
@@ -145,16 +145,15 @@ def sharded_quantized_matmul(x: jax.Array, w: jax.Array, cfg: QuantConfig,
     x_q = quantize(x2, sx)
     acc = sharded_integer_matmul(x_q, w_q, cfg, mesh, m_axis=m_axis,
                                  n_axis=n_axis, k_axis=k_axis)
-    backend = _resolve_backend(cfg)
-    if backend.fused is not None and cfg.fuse_epilogue and per_token:
-        # Mirror the fused composition's rounding order exactly: the kernel
-        # epilogue applies the weight scale in-kernel (acc * sw) and the
-        # row scale outside — (acc*sw)*sx rounds differently from
-        # acc*(sx*sw), and bitwise parity against `quantized_matmul` with
-        # the same cfg requires the same order. (Per-tensor fused folds
-        # sx*sw into one kernel scale — identical to the unfused order.)
-        y = (acc.astype(jnp.float32)
-             * jnp.asarray(sw, jnp.float32).reshape(1, -1)) * sx
+    if per_token:
+        # Mirror the single-device rounding order exactly, barriers
+        # included: `_qmm_forward` pins the per-token dequant to
+        # (acc * sw) then * sx so the epilogue rounds identically at
+        # every shape (quant/matmul._pin — the speculative-decoding
+        # acceptance contract rests on it), and (acc*sw)*sx rounds
+        # differently from acc*(sx*sw). Fused kernels apply sw in-kernel;
+        # the explicit multiply here is the same f32 product bit for bit.
+        y = _pin(_pin(acc.astype(jnp.float32) * sw) * sx)
     else:
         y = acc.astype(jnp.float32) * (sx * sw)
     if bias is not None:

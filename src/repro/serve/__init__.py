@@ -6,6 +6,9 @@ Public surface:
   SlotScheduler                          — admission + slot free-list
   PagePool, PrefixCache                  — refcounted page ids + radix
                                            prefix cache (paging.py)
+  SpecConfig, Speculator, SpecMetrics    — draft-model speculative decoding
+                                           with the bitwise acceptance
+                                           contract (speculative.py)
   padded_prefill_ok, compiled_fns,
   clear_compiled_fns                     — engine plumbing reused by
                                            benchmarks and the eval runners
@@ -19,8 +22,10 @@ from repro.serve.engine import (Engine, FINISH_REASONS, ServeRequest,
 from repro.serve.paging import PagePool, PrefixCache
 from repro.serve.sampling import GREEDY, SamplingConfig, sample_token
 from repro.serve.scheduler import SlotScheduler
+from repro.serve.speculative import SpecConfig, SpecMetrics, Speculator
 
 __all__ = ["Engine", "ServeRequest", "FINISH_REASONS", "SamplingConfig",
            "GREEDY", "sample_token", "SlotScheduler", "PagePool",
-           "PrefixCache", "compiled_fns", "clear_compiled_fns",
-           "mesh_compiled_fns", "padded_prefill_ok"]
+           "PrefixCache", "SpecConfig", "SpecMetrics", "Speculator",
+           "compiled_fns", "clear_compiled_fns", "mesh_compiled_fns",
+           "padded_prefill_ok"]

@@ -68,6 +68,12 @@ class ServeRequest:
     prompt: np.ndarray                  # (len,) int32, len >= 1
     max_new: int = 16
     sampling: SamplingConfig = GREEDY
+    # per-request speculation cap: None -> the engine's SpecConfig window,
+    # 0 -> sequential decode for this request, n -> accept at most n
+    # drafts per verify pass (clamped to the engine window). The emitted
+    # tokens are identical either way — spec_k only changes how many
+    # arrive per pass (serve/speculative.py).
+    spec_k: Optional[int] = None
     # filled by the engine:
     output: List[int] = dataclasses.field(default_factory=list)
     finish_reason: Optional[str] = None
@@ -97,7 +103,11 @@ def compiled_fns(cfg: ArchConfig, rules: ShardingRules):
 def clear_compiled_fns() -> None:
     """Drop all cached compiled prefill/decode executables (eval runners
     call this between suites so back-to-back backend sweeps don't
-    accumulate live executables)."""
+    accumulate live executables). Covers every executable cache the
+    serving stack owns: the single-device pairs, the mesh-wrapped
+    shard_map pairs, and — because a Speculator obtains its draft pair
+    through these same caches — the speculative compiled fns
+    (tests/test_serve.py pins this as a regression)."""
     compiled_fns.cache_clear()
     mesh_compiled_fns.cache_clear()
 
@@ -294,7 +304,8 @@ class Engine:
                  cache_dtype=jnp.float32,
                  prefix_caching: bool = True, page_size: int = 8,
                  cache_pages: Optional[int] = None,
-                 mesh: Optional[Mesh] = None):
+                 mesh: Optional[Mesh] = None,
+                 spec=None, draft_params=None):
         assert not cfg.embed_stub, "serving drives token models"
         self.cfg, self.params, self.rules = cfg, params, rules
         self.slots, self.max_len, self.eos_id = slots, max_len, eos_id
@@ -343,6 +354,26 @@ class Engine:
                 self.pages = jax.device_put(self.pages,
                                             self._pages_shardings)
         self._slot_chain: List[Tuple[int, ...]] = [()] * slots
+        # ---- draft-model speculation (serve/speculative.py) -------------
+        self.speculator = None
+        if spec is not None:
+            from repro.serve.speculative import Speculator
+            self.speculator = Speculator(
+                spec, cfg, self.params, draft_params, slots=slots,
+                max_len=max_len, rules=rules, cache_dtype=cache_dtype,
+                mesh=self.mesh)
+            # verify reuses self._decode at width spec.k (jit and the
+            # shard_map bodies re-specialize per token-window width) and
+            # un-commits through the same rollback the draft pool uses,
+            # pinned to the pool's sharding on a mesh
+            if self.mesh is not None:
+                self._rollback = jax.jit(
+                    TLM.rollback_positions,
+                    out_shardings=mesh_compiled_fns(
+                        cfg, rules, self.mesh, slots, max_len,
+                        cache_dtype)[2]["pool"])
+            else:
+                self._rollback = jax.jit(TLM.rollback_positions)
 
     # ---- request intake --------------------------------------------------
     def submit(self, req: ServeRequest) -> None:
@@ -419,6 +450,10 @@ class Engine:
                 self._retire(slot)
             else:
                 self._tok[slot] = req.output[-1]
+                if self.speculator is not None:
+                    # draft-side cold prefill of the full prompt (the
+                    # draft never reads the paged prefix store)
+                    self.speculator.admit(slot, req.prompt, self._bucket)
 
     # ---- token emission / finish ----------------------------------------
     def _emit(self, req: ServeRequest, tok: int) -> None:
@@ -470,13 +505,36 @@ class Engine:
                                             self._pages_shardings)
 
     # ---- the serving loop ------------------------------------------------
+    def _spec_eligible(self, active: List[int]) -> bool:
+        """A spec pass needs every active slot's K window positions in
+        bounds (position writes are structural — a row cannot opt out of
+        the batched verify), and at least one request that wants drafts.
+        Near the cache ceiling the engine falls back to plain steps; the
+        acceptance contract is interleaving-independent, so mixing pass
+        kinds never changes the served tokens."""
+        if self.speculator is None:
+            return False
+        k = self.speculator.spec.k
+        if any(self._pos[s] + k > self.max_len for s in active):
+            return False
+        return any((self._slot_req[s].spec_k is None
+                    or self._slot_req[s].spec_k > 0) for s in active)
+
     def step(self) -> bool:
-        """Admit into free slots, then one decode step over the whole pool.
-        Returns False once queue and pool are both empty."""
+        """Admit into free slots, then one decode step over the whole pool
+        — a (slots, K) speculative verify pass when configured and in
+        bounds, a (slots, 1) sequential step otherwise. Returns False once
+        queue and pool are both empty."""
         self._admit()
         active = [s for s in range(self.slots) if self._slot_req[s]]
         if not active:
             return not self.sched.idle
+        if self._spec_eligible(active):
+            self._spec_step(active)
+            return True
+        if self.speculator is not None:
+            # keep the draft pool on the true stream through the fallback
+            self.speculator.advance(self._tok, self._pos)
         logits, self.pool = self._decode(
             self.params, self.pool, jnp.asarray(self._tok[:, None]),
             jnp.asarray(self._pos))
@@ -495,6 +553,62 @@ class Engine:
                 self._tok[s] = tok
         return True
 
+    def _spec_step(self, active: List[int]) -> None:
+        """One draft-propose / target-verify / commit / rollback pass.
+
+        Commits n in [1, K] tokens per active slot: emission j samples
+        verify logits row j (bitwise equal to the j-th sequential
+        decode's row) keyed by the committed-token counter, and continues
+        while the emitted token equals the draft the next row was
+        verified against. Rejected window positions are erased from both
+        pools so every row ends bitwise identical to its
+        sequential-decode state (docs/serving.md)."""
+        spec = self.speculator
+        k = spec.spec.k
+        p0 = self._pos.copy()
+        window = spec.propose(self._tok, self._pos)
+        logits, self.pool = self._decode(
+            self.params, self.pool, jnp.asarray(window),
+            jnp.asarray(self._pos))
+        self.decode_steps += 1
+        self.busy_slot_steps += len(active)
+        spec.metrics.passes += 1
+        rows = np.asarray(logits)                   # (slots, K, V)
+        frontier = p0.copy()                        # rollback start/slot
+        retired: List[int] = []
+        for s in active:
+            req = self._slot_req[s]
+            cap = k if req.spec_k is None else 1 + min(max(req.spec_k, 0),
+                                                       k - 1)
+            emitted = 0
+            for j in range(cap):
+                tok = sample_token(rows[s, j], req.sampling, req.rid,
+                                   len(req.output))
+                self._emit(req, tok)
+                emitted += 1
+                if req.finish_reason:
+                    break
+                # continue only while the next verified row consumed
+                # this exact token (the draft proposal at window j+1)
+                if j + 1 >= cap or tok != window[s, j + 1]:
+                    break
+            spec.metrics.record(drafted=cap - 1, committed=emitted)
+            frontier[s] = p0[s] + emitted
+            if req.finish_reason:
+                retired.append(s)
+            else:
+                self._tok[s] = req.output[-1]
+                self._pos[s] = p0[s] + emitted
+        # un-commit rejected positions [frontier, p0 + K) in both pools.
+        # Parked rows (frontier == p0 == 0 stays) collected junk at
+        # [0, K) during the pass — erased the same way.
+        stop = p0 + k
+        self.pool = self._rollback(self.pool, jnp.asarray(frontier),
+                                   jnp.asarray(stop))
+        spec.rollback(frontier, stop)
+        for s in retired:
+            self._retire(s)
+
     def run(self) -> Dict:
         """Serve until the queue drains; returns the stats summary."""
         t0 = time.time()
@@ -507,4 +621,6 @@ class Engine:
                          prefill_tokens=self.prefill_tokens,
                          prefix_hit_tokens=self.prefix_hit_tokens,
                          prefix_stats=(self.prefix.stats()
-                                       if self.prefix else None))
+                                       if self.prefix else None),
+                         spec=(self.speculator.metrics.summary()
+                               if self.speculator else None))

@@ -35,7 +35,8 @@ def summarize(completed, elapsed_s: float, *, n_slots: int,
               decode_steps: int, busy_slot_steps: int, prefills: int,
               waves: int, prefill_tokens: int = 0,
               prefix_hit_tokens: int = 0,
-              prefix_stats: Optional[Dict] = None) -> Dict:
+              prefix_stats: Optional[Dict] = None,
+              spec: Optional[Dict] = None) -> Dict:
     """Aggregate stats over a finished engine run (flat dict — the
     benchmark writes these rows into the versioned artifact schema).
 
@@ -45,6 +46,13 @@ def summarize(completed, elapsed_s: float, *, n_slots: int,
     cold workload — the quantity the shared-system-prompt traffic shape
     drives up (every avoided prefill token skips the MAC-densest phase,
     where the approximate-multiplier energy savings are largest).
+
+    ``spec`` is the speculative-decoding summary from
+    ``serve.speculative.SpecMetrics`` (None on a non-speculative engine):
+    verify passes, drafted vs committed token counters, and the
+    acceptance-length histogram — hist[a] counts verify outcomes that
+    accepted exactly a draft tokens, so committed == accepted + outcomes
+    (each outcome also commits the target's own next token).
     """
     new_tokens = sum(len(r.output) for r in completed)
     ttfts = [r.timing.ttft_s for r in completed
@@ -70,4 +78,5 @@ def summarize(completed, elapsed_s: float, *, n_slots: int,
         "ttft_ms_max": max(ttfts) * 1e3 if ttfts else None,
         "finish_reasons": ",".join(f"{k}:{v}"
                                    for k, v in sorted(reasons.items())),
+        **(spec or {}),
     }

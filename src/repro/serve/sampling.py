@@ -5,6 +5,15 @@ by batch composition or slot index — so sampled requests keep the same
 batching-invariance contract as greedy ones: a request decodes the same
 tokens whether it is served alone, in a full batch, or admitted mid-decode
 into a reused slot (tests/test_serve.py).
+
+``step`` is the request's COMMITTED-token counter (len(req.output) at the
+moment of the draw), not a decode-pass counter. The distinction is what
+keeps sampled streams reproducible under speculative decoding: a verify
+pass commits up to K tokens at once, and each emission must consume the
+same key the sequential decode would have used at that output index — a
+pass-indexed key would advance once per verify pass and desynchronize the
+stream the first time acceptance != 1 (regression:
+tests/test_speculative.py::test_sampled_stream_spec_on_equals_off).
 """
 from __future__ import annotations
 
@@ -36,8 +45,22 @@ class SamplingConfig:
 GREEDY = SamplingConfig()
 
 
+def stream_key(seed: int, rid: int, step: int) -> jax.Array:
+    """The PRNG key for one draw of request ``rid``'s sampling stream at
+    committed-token index ``step``. A pure function of (seed, rid, step):
+    batch composition, slot index, decode-pass count, and speculative
+    acceptance lengths are all absent by construction — the invariance
+    contracts (tests/test_serve.py, tests/test_speculative.py) depend on
+    exactly this signature."""
+    return jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(seed), rid), step)
+
+
 def sample_token(logits, scfg: SamplingConfig, rid: int, step: int) -> int:
-    """One token id from a (V,) logits row."""
+    """One token id from a (V,) logits row. ``step`` is the request's
+    committed-token count at the time of the draw (see module docstring —
+    under speculation every emission in a multi-token commit advances it
+    by one, exactly as sequential decode would)."""
     if scfg.kind not in KINDS:
         raise ValueError(f"unknown sampling kind {scfg.kind!r}; "
                          f"one of {KINDS}")
@@ -47,8 +70,7 @@ def sample_token(logits, scfg: SamplingConfig, rid: int, step: int) -> int:
         return int(np.argmax(np.asarray(logits)))
     logits = jnp.asarray(logits)
     scaled = logits.astype(jnp.float32) / scfg.temperature   # validated > 0
-    key = jax.random.fold_in(
-        jax.random.fold_in(jax.random.PRNGKey(scfg.seed), rid), step)
+    key = stream_key(scfg.seed, rid, step)
     if scfg.kind == "top_k":
         if scfg.top_k < 1:
             raise ValueError("kind='top_k' requires top_k >= 1")

@@ -1,0 +1,262 @@
+"""Draft-model speculative decoding with a bitwise acceptance contract.
+
+The decode loop's latency is one full model pass per token. Speculation
+amortizes it: a cheap *draft* model proposes K-1 greedy continuations per
+slot, the *target* model scores the whole (slots, K) window in ONE
+batched :func:`models.transformer_lm.verify_step` pass, and the engine
+commits the longest prefix where draft and target agree plus the
+target's own next token — between 1 and K tokens per pass.
+
+The contract this module carries (and tests/test_speculative.py proves
+per registered backend, per draft, per K, composed with continuous
+batching, mid-decode admission, prefix-cache hits, and
+``Engine(mesh=...)``):
+
+    served tokens are bitwise identical to sequential decode.
+
+Why it holds:
+
+  * verify logits row j equal the j-th sequential decode's logits bit
+    for bit: per-token activation scales make every int8 code and
+    integer accumulator row-local, and the float dequant order is pinned
+    shape-stable (quant/matmul._pin), so a (slots, K) window and K
+    single-token steps compile to the same per-row arithmetic;
+  * emission samples row j with the committed-token step counter
+    (serve/sampling.py), so sampled streams advance identically with
+    speculation on or off;
+  * acceptance stops at the first draft/emission disagreement — every
+    position left in the cache holds the KV of a token the sequential
+    decode also fed — and the rejected suffix is erased by
+    :func:`models.transformer_lm.rollback_positions`, restoring the pool
+    row to the exact bitwise state sequential decode would have left
+    (zeros past the frontier, the init_cache state).
+
+The draft is either the same parameters on a cheaper registered backend
+(``SpecConfig(draft_backend='approx_stage1')`` drafting for an
+``int8_exact`` target) or a smaller registered model config with its own
+parameters (``draft_cfg=``/``draft_params=``). The draft keeps its own
+slot pool and always cold-prefills at admission — accepted drafts equal
+target tokens, so after rollback its pool is exactly "the draft ran over
+the true stream" and its proposals stay coherent; a wrong draft can only
+shorten acceptance, never corrupt output.
+
+Speculation is gated to position-indexed cache layouts
+(``padded_prefill_ok`` — the same predicate that gates paged prefix
+caching): SSM states fold tokens in irreversibly and windowed ring
+buffers alias positions, so neither can be rolled back.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer_lm as TLM
+from repro.models.transformer_lm import ArchConfig
+from repro.parallel.sharding import ShardingRules
+from repro.quant.quantize import for_lm
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Engine-level speculative-decoding configuration.
+
+    k              verify window width = max tokens committed per pass
+                   (k-1 draft proposals + the target's own next token);
+                   k=1 degenerates to sequential decode through the
+                   verify path.
+    draft_backend  registry backend the draft runs on ('bf16' or any
+                   `quant.matmul.list_backends()` name). Ignored when
+                   draft_cfg pins a full config.
+    draft_cfg      optional smaller registered ArchConfig for the draft
+                   (its own params go in `Engine(draft_params=)`); None
+                   drafts with the target architecture + draft_backend.
+
+    Per-request override: ``ServeRequest.spec_k`` caps how many drafts
+    that request accepts per pass (0 = sequential for that request; None
+    = the engine window). The verify window stays k wide — per-request
+    caps change acceptance, not compiled shapes.
+    """
+    k: int = 4
+    draft_backend: str = "bf16"
+    draft_cfg: Optional[ArchConfig] = None
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"SpecConfig.k must be >= 1, got {self.k}")
+
+    def draft_arch(self, target_cfg: ArchConfig) -> ArchConfig:
+        """The draft's ArchConfig: explicit draft_cfg, or the target
+        architecture re-quantized onto draft_backend."""
+        if self.draft_cfg is not None:
+            return self.draft_cfg
+        return dataclasses.replace(target_cfg,
+                                   quant=for_lm(self.draft_backend))
+
+
+class SpecMetrics:
+    """Acceptance bookkeeping for one engine run.
+
+    hist[a] counts verify outcomes that accepted exactly ``a`` draft
+    tokens, a in [0, k-1] — edge 0 is all-rejected, edge k-1 full
+    accept. Committed tokens per outcome are always accepted+1 (the
+    target's own token rides along even when every draft is rejected),
+    an invariant tests/test_speculative.py checks against the histogram.
+    """
+
+    def __init__(self, k: int):
+        self.k = k
+        self.passes = 0               # verify_step calls
+        self.drafted = 0              # draft tokens offered to slots
+        self.committed = 0            # tokens emitted from verify passes
+        self.hist = [0] * k           # accepted-draft count per outcome
+
+    def record(self, drafted: int, committed: int) -> None:
+        accepted = committed - 1
+        self.drafted += drafted
+        self.committed += committed
+        self.hist[min(accepted, self.k - 1)] += 1
+
+    def summary(self) -> Dict:
+        outcomes = sum(self.hist)
+        accepted = sum(a * n for a, n in enumerate(self.hist))
+        return {
+            "spec_passes": self.passes,
+            "spec_drafted": self.drafted,
+            "spec_committed": self.committed,
+            "spec_accept_hist": list(self.hist),
+            "spec_accept_mean": accepted / max(outcomes, 1),
+            "spec_accept_rate": accepted / max(self.drafted, 1),
+        }
+
+
+class Speculator:
+    """The engine's draft half: a second slot pool + compiled pair.
+
+    Owns the draft model's KV pool (same slots/max_len geometry as the
+    target pool), its compiled prefill/decode — obtained through the same
+    ``compiled_fns`` / ``mesh_compiled_fns`` caches as the target pair,
+    so ``clear_compiled_fns()`` drops the speculative executables too —
+    and the acceptance metrics. The Engine drives it: ``admit`` at
+    prefill, ``propose`` before each verify pass, ``advance`` on plain
+    fallback steps (so the draft pool never falls behind the frontier),
+    ``rollback`` after acceptance.
+    """
+
+    def __init__(self, spec: SpecConfig, target_cfg: ArchConfig, params,
+                 draft_params, *, slots: int, max_len: int,
+                 rules: ShardingRules, cache_dtype, mesh=None):
+        from repro.serve.engine import (compiled_fns, mesh_compiled_fns,
+                                        padded_prefill_ok, _write_slot,
+                                        _tree_shardings, _flat_specs)
+        self.spec = spec
+        self.cfg = spec.draft_arch(target_cfg)
+        if not padded_prefill_ok(self.cfg) or not padded_prefill_ok(
+                target_cfg):
+            raise ValueError(
+                "speculative decoding requires position-indexed caches "
+                "(padded_prefill_ok) for both target and draft — SSM "
+                "states and windowed ring buffers cannot roll back "
+                f"rejected positions (target={target_cfg.name}, "
+                f"draft={self.cfg.name})")
+        if spec.draft_cfg is not None and draft_params is None:
+            raise ValueError("SpecConfig.draft_cfg set but no draft_params "
+                             "given to the Engine")
+        self.params = params if draft_params is None else draft_params
+        self.slots, self.max_len = slots, max_len
+        self.pool = TLM.init_cache(self.cfg, slots, max_len, cache_dtype)
+        self._cache_dtype = cache_dtype
+        self.mesh = mesh
+        if mesh is not None:
+            self._prefill, self._decode, shardings = mesh_compiled_fns(
+                self.cfg, rules, mesh, slots, max_len, cache_dtype)
+            self.params = jax.device_put(self.params, shardings["params"])
+            self.pool = jax.device_put(self.pool, shardings["pool"])
+            self._pool_write = jax.jit(_write_slot,
+                                       out_shardings=shardings["pool"])
+            self._rollback = jax.jit(TLM.rollback_positions,
+                                     out_shardings=shardings["pool"])
+        else:
+            self._prefill, self._decode = compiled_fns(self.cfg, rules)
+            self._pool_write = _write_slot
+            self._rollback = jax.jit(TLM.rollback_positions)
+        self.metrics = SpecMetrics(spec.k)
+
+    # ---- admission: cold draft prefill of the full prompt ---------------
+    def admit(self, slot: int, prompt: np.ndarray, bucket_fn) -> None:
+        """Prefill the draft pool row for a freshly admitted request.
+
+        Always the FULL prompt from position 0 — the target may gather a
+        prefix-cache hit, but draft pages are never cached (the draft is
+        advisory; recomputing it keeps the paged store target-only and
+        the hit==miss contract untouched)."""
+        plen = len(prompt)
+        bucket = bucket_fn(plen, 0)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :plen] = prompt
+        fresh = TLM.init_cache(self.cfg, 1, self.max_len, self._cache_dtype)
+        _, fresh = self._prefill(self.params, jnp.asarray(toks), fresh,
+                                 jnp.asarray([plen], jnp.int32),
+                                 jnp.int32(0))
+        self.pool = self._pool_write(self.pool, fresh, jnp.int32(slot)
+                                     if self.mesh is not None else slot)
+
+    # ---- the draft phase -------------------------------------------------
+    def propose(self, tok: np.ndarray, pos: np.ndarray) -> np.ndarray:
+        """K greedy draft steps over the whole pool -> (slots, K) window.
+
+        window[:, 0] is the committed next-input token; window[:, j] for
+        j >= 1 is the draft's greedy proposal after consuming
+        window[:, :j]. Runs K single-token decodes (not K-1): the last
+        step feeds window[:, K-1] so the draft pool covers every window
+        position — on a full accept the frontier advances K tokens and
+        the draft cache must already hold KV for all of them. Its output
+        logits are discarded.
+        """
+        k = self.spec.k
+        win = np.zeros((self.slots, k), np.int32)
+        win[:, 0] = tok
+        dtok, dpos = tok.copy(), pos.copy()
+        for j in range(1, k):
+            logits, self.pool = self._decode(
+                self.params, self.pool, jnp.asarray(dtok[:, None]),
+                jnp.asarray(dpos))
+            dtok = np.asarray(jnp.argmax(logits[:, 0], axis=-1),
+                              np.int32)
+            dpos += 1
+            win[:, j] = dtok
+        # sync step: write the last window position's KV (logits unused)
+        _, self.pool = self._decode(self.params, self.pool,
+                                    jnp.asarray(win[:, k - 1:k]),
+                                    jnp.asarray(dpos))
+        return win
+
+    def advance(self, tok: np.ndarray, pos: np.ndarray) -> None:
+        """One width-1 draft step mirroring a plain engine decode step
+        (the near-ceiling fallback), so the draft pool tracks the true
+        stream and later spec passes resume with full context."""
+        _, self.pool = self._decode(self.params, self.pool,
+                                    jnp.asarray(tok[:, None]),
+                                    jnp.asarray(pos))
+
+    def rollback(self, start: np.ndarray, stop: np.ndarray) -> None:
+        """Erase draft KV at positions [start[s], stop[s]) per slot."""
+        self.pool = self._rollback(self.pool, jnp.asarray(start, jnp.int32),
+                                   jnp.asarray(stop, jnp.int32))
+
+
+def acceptance(window_row: np.ndarray, emitted: List[int]) -> int:
+    """Accepted-draft count for one slot's outcome: the length of the
+    leading run where emission j matched the draft it was verified
+    against (committed == acceptance + 1). Pure bookkeeping — exposed for
+    the property tests."""
+    a = 0
+    for j, tok in enumerate(emitted[:-1]):
+        if j + 1 < len(window_row) and tok == window_row[j + 1]:
+            a += 1
+        else:
+            break
+    return a

@@ -31,9 +31,9 @@ def test_rows_extraction_filters_untimed_and_suites():
                              "serve": [{"backend": "x",
                                         "us_per_call": 5.0}]},
                             only={"kernels"})
-    # kernel rows carry shape; the policy/offered/share components sit at
-    # their defaults so pre-existing kernel baselines stay comparable
-    assert ("kernels", "int8_exact", 256, 256, 256, "", 0, -1) in rows
+    # kernel rows carry shape; the policy/offered/share/spec_k components
+    # sit at their defaults so pre-existing kernel baselines stay comparable
+    assert ("kernels", "int8_exact", 256, 256, 256, "", 0, -1, 0) in rows
     assert all(k[0] == "kernels" for k in rows)
     assert not any(k[1] == "note_row" for k in rows)
 
@@ -48,14 +48,22 @@ def test_serve_rows_key_on_sweep_point_and_normalize_by_bf16():
          "share": 0.5, "us_per_call": 4000.0},
         {"backend": "approx_deficit", "policy": "continuous",
          "offered": 16, "share": -1.0, "us_per_call": 3000.0},
+        {"backend": "bf16", "policy": "spec", "offered": 16,
+         "share": -1.0, "spec_k": 4, "us_per_call": 500.0},
+        {"backend": "approx_deficit", "policy": "spec", "offered": 16,
+         "share": -1.0, "spec_k": 4, "us_per_call": 1500.0},
     ]}
     rows = bench_gate._rows(results, only={"serve"})
-    assert len(rows) == 3, "sweep points collided into one key"
+    assert len(rows) == 5, "sweep points collided into one key"
     values, gated = bench_gate._normalized(rows, absolute=False)
-    key = ("serve", "approx_deficit", 0, 0, 0, "cached", 16, 0.5)
+    key = ("serve", "approx_deficit", 0, 0, 0, "cached", 16, 0.5, 0)
     assert values[key] == 4.0 and key in gated
+    # speculative rows are a distinct sweep point keyed by spec_k, and
+    # normalize against the bf16 spec row at the same (offered, K)
+    spec_key = ("serve", "approx_deficit", 0, 0, 0, "spec", 16, -1.0, 4)
+    assert values[spec_key] == 3.0 and spec_key in gated
     # no bf16 row at the continuous point in this fixture: raw, ungated
-    assert ("serve", "approx_deficit", 0, 0, 0, "continuous", 16, -1.0) \
+    assert ("serve", "approx_deficit", 0, 0, 0, "continuous", 16, -1.0, 0) \
         not in gated
 
 

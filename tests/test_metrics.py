@@ -1,0 +1,115 @@
+"""Direct unit tests for serve/metrics.py — the summary arithmetic on
+hand-built request sequences, independent of any engine run.
+
+The engine tests exercise summarize() end to end but can only assert
+coarse properties (occupancy <= 1, ttft not None). Here the inputs are
+synthetic, so every derived quantity has a hand-computable expected
+value — including the speculative summary merge and the acceptance-
+histogram edges (all-rejected, full-accept) that the engine only hits on
+adversarial workloads.
+"""
+import numpy as np
+import pytest
+
+from repro.serve import ServeRequest, SpecMetrics
+from repro.serve.metrics import RequestTiming, summarize
+
+
+def _req(rid, n_out, submit_t, first_t, done_t, reason="eos"):
+    r = ServeRequest(rid=rid, prompt=np.zeros(1, np.int32))
+    r.output = list(range(n_out))
+    r.finish_reason = reason
+    r.timing = RequestTiming(submit_t=submit_t, first_token_t=first_t,
+                             done_t=done_t)
+    return r
+
+
+def test_request_timing_spans():
+    t = RequestTiming(submit_t=1.0, first_token_t=1.25, done_t=3.0)
+    assert t.ttft_s == pytest.approx(0.25)
+    assert t.total_s == pytest.approx(2.0)
+    assert RequestTiming(submit_t=1.0).ttft_s is None
+    assert RequestTiming(first_token_t=1.0).total_s is None
+
+
+def test_summarize_hand_built_sequence():
+    # two requests, 10s wall: 6+4 tokens over 20 decode steps on 2 slots,
+    # 30 busy slot-steps of the 40 available
+    completed = [_req(0, 6, 0.0, 0.5, 6.0),
+                 _req(1, 4, 1.0, 3.0, 9.0, reason="max_new")]
+    s = summarize(completed, 10.0, n_slots=2, decode_steps=20,
+                  busy_slot_steps=30, prefills=2, waves=1,
+                  prefill_tokens=12, prefix_hit_tokens=4)
+    assert s["requests"] == 2
+    assert s["new_tokens"] == 10
+    assert s["tok_per_s"] == pytest.approx(1.0)
+    assert s["occupancy"] == pytest.approx(30 / 40)
+    # TTFT spans submit -> first token, so request 1's queueing delay
+    # (submitted at 1.0, first token at 3.0) is included
+    assert s["ttft_ms_mean"] == pytest.approx((0.5 + 2.0) / 2 * 1e3)
+    assert s["ttft_ms_max"] == pytest.approx(2.0 * 1e3)
+    assert s["prefix_hit_rate"] == pytest.approx(4 / 16)
+    assert s["finish_reasons"] == "eos:1,max_new:1"
+    # no speculative engine -> no spec keys leak into the summary
+    assert not any(k.startswith("spec_") for k in s)
+
+
+def test_summarize_empty_run_has_no_nans():
+    s = summarize([], 0.0, n_slots=4, decode_steps=0, busy_slot_steps=0,
+                  prefills=0, waves=0)
+    assert s["requests"] == 0 and s["new_tokens"] == 0
+    assert s["occupancy"] == 0.0
+    assert s["prefix_hit_rate"] == 0.0
+    assert s["ttft_ms_mean"] is None and s["ttft_ms_max"] is None
+
+
+def test_summarize_merges_spec_summary():
+    m = SpecMetrics(4)
+    m.passes = 3
+    m.record(drafted=3, committed=4)     # full accept
+    m.record(drafted=3, committed=1)     # all rejected
+    m.record(drafted=3, committed=2)
+    s = summarize([_req(0, 7, 0.0, 0.1, 1.0)], 1.0, n_slots=1,
+                  decode_steps=3, busy_slot_steps=3, prefills=1, waves=1,
+                  spec=m.summary())
+    assert s["spec_passes"] == 3
+    assert s["spec_drafted"] == 9
+    assert s["spec_committed"] == 7
+    assert s["spec_accept_hist"] == [1, 1, 0, 1]
+    assert s["spec_accept_mean"] == pytest.approx(4 / 3)
+    assert s["spec_accept_rate"] == pytest.approx(4 / 9)
+
+
+def test_spec_metrics_all_rejected_edge():
+    # K-1 drafts offered, every one rejected: each outcome still commits
+    # the target's own token, so the histogram piles on bin 0
+    m = SpecMetrics(4)
+    for _ in range(5):
+        m.record(drafted=3, committed=1)
+    s = m.summary()
+    assert s["spec_accept_hist"] == [5, 0, 0, 0]
+    assert s["spec_accept_mean"] == 0.0
+    assert s["spec_accept_rate"] == 0.0
+    assert s["spec_committed"] == 5        # one target token per pass
+
+
+def test_spec_metrics_full_accept_edge():
+    m = SpecMetrics(4)
+    for _ in range(5):
+        m.record(drafted=3, committed=4)
+    s = m.summary()
+    assert s["spec_accept_hist"] == [0, 0, 0, 5]
+    assert s["spec_accept_mean"] == 3.0
+    assert s["spec_accept_rate"] == 1.0
+    assert s["spec_committed"] == 20
+
+
+def test_spec_metrics_k1_degenerate():
+    # K=1: no drafts exist; every pass is a single-token commit into the
+    # only histogram bin and the rates stay defined (no 0/0)
+    m = SpecMetrics(1)
+    m.record(drafted=0, committed=1)
+    s = m.summary()
+    assert s["spec_accept_hist"] == [1]
+    assert s["spec_accept_mean"] == 0.0
+    assert s["spec_accept_rate"] == 0.0

@@ -830,3 +830,34 @@ def test_sharded_engine_odd_slots_replicate(tiny_lm, serve_mesh):
         eng.run()
     assert {r.rid: r.output for r in out.completed} \
         == {r.rid: r.output for r in ref.completed}
+
+
+def test_clear_compiled_fns_drops_every_executable_cache(tiny_lm,
+                                                         serve_mesh):
+    # regression: clear_compiled_fns() must empty BOTH lru caches in one
+    # hook — the single-device pairs, the mesh-wrapped shard_map pairs,
+    # and (because a Speculator obtains its draft pair through the same
+    # caches) the speculative executables. An earlier sketch cleared only
+    # compiled_fns, leaving mesh executables pinned across eval sweeps.
+    from repro.serve import SpecConfig, clear_compiled_fns, compiled_fns
+
+    cfg, params = tiny_lm
+    clear_compiled_fns()
+    assert compiled_fns.cache_info().currsize == 0
+    assert mesh_compiled_fns.cache_info().currsize == 0
+
+    # populate all three users: plain engine, mesh engine, speculative
+    # engine whose draft backend differs from the target
+    Engine(cfg, params, slots=2, max_len=MAX_LEN)
+    Engine(cfg, params, slots=2, max_len=MAX_LEN, mesh=serve_mesh)
+    Engine(cfg, params, slots=2, max_len=MAX_LEN, mesh=serve_mesh,
+           spec=SpecConfig(k=2, draft_backend="approx_stage1"))
+    assert compiled_fns.cache_info().currsize >= 1
+    # target + draft cfgs each hold a mesh entry
+    assert mesh_compiled_fns.cache_info().currsize >= 2
+
+    clear_compiled_fns()
+    assert compiled_fns.cache_info().currsize == 0, \
+        "single-device executables survived clear_compiled_fns()"
+    assert mesh_compiled_fns.cache_info().currsize == 0, \
+        "mesh/speculative executables survived clear_compiled_fns()"

@@ -1,0 +1,503 @@
+"""Speculative decoding: the bitwise acceptance contract, per backend.
+
+The contract (serve/speculative.py, docs/serving.md): greedy (and
+sampled) speculative serving emits token sequences bitwise identical to
+sequential decode — for every registered backend, for any draft backend,
+for any window K, composed with continuous batching, mid-decode
+admission, prefix-cache hits, per-request spec_k caps, the max_len
+ceiling fallback, and Engine(mesh=...). The pieces pinned here:
+
+  * verify logits row j == the j-th sequential decode's logits, bitwise
+    (the shape-stable dequant pin in quant/matmul — the whole contract
+    rests on it, so it gets a direct model-level test)
+  * acceptance stops at the first draft/emission disagreement; committed
+    tokens per outcome are always accepted drafts + 1
+  * rollback erases every rejected position: the pool row after a
+    speculative run is bitwise identical to the sequential engine's row
+    (zeros past the frontier — the init_cache state)
+  * pages published from a speculative engine equal the sequential
+    engine's pages, and prefix-cache refcounts balance identically
+  * sampling streams are keyed by committed-token count, so temperature
+    and top_k requests decode the same tokens with speculation on or off
+  * a draft that disagrees (different backend) only shortens acceptance;
+    a self-draft (same backend) achieves full acceptance and strictly
+    fewer decode steps
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.configs import registry
+from repro.models import transformer_lm as TLM
+from repro.quant import matmul as QM
+from repro.quant.quantize import for_lm
+from repro.serve import (Engine, GREEDY, SamplingConfig, ServeRequest,
+                         SpecConfig, SpecMetrics)
+from repro.serve.speculative import acceptance
+
+BACKENDS = list(QM.list_backends())
+MAX_LEN = 32
+
+
+@pytest.fixture(scope="module")
+def tiny_lm():
+    cfg = registry.reduced("smollm-135m", n_layers=2, d_model=64, n_heads=4,
+                           n_kv_heads=2, d_ff=128, vocab=64, vocab_pad=64,
+                           head_dim=16)
+    params = TLM.init(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _mixed_reqs(vocab, seed=3, n=5, sampling=None, spec_k=None):
+    """More requests than the 3-slot pool -> the tail is admitted
+    mid-decode into reused slots (the batching composition every parity
+    test here exercises)."""
+    rng = np.random.default_rng(seed)
+    lens, news = rng.integers(2, 10, n), rng.integers(3, 9, n)
+    return [ServeRequest(rid=rid,
+                         prompt=rng.integers(0, vocab, int(lens[rid]))
+                         .astype(np.int32),
+                         max_new=int(news[rid]),
+                         sampling=sampling or GREEDY,
+                         spec_k=spec_k)
+            for rid in range(n)]
+
+
+def _serve(cfg, params, reqs, *, spec=None, slots=3, max_len=MAX_LEN,
+           **kw):
+    eng = Engine(cfg, params, slots=slots, max_len=max_len, spec=spec,
+                 **kw)
+    for r in reqs:
+        eng.submit(r)
+    stats = eng.run()
+    return {r.rid: list(r.output) for r in eng.completed}, stats, eng
+
+
+def _quant(cfg0, backend):
+    return dataclasses.replace(cfg0, quant=for_lm(backend))
+
+
+# ---------------------------------------------------------------------------
+# the model-level foundation: verify_step == K sequential decode_steps
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["bf16"] + BACKENDS)
+def test_verify_step_bitwise_equals_sequential_decode(tiny_lm, backend):
+    # everything else in this file rests on this: under jit, a (1, K)
+    # verify window produces the same logits AND the same cache writes,
+    # bit for bit, as K single-token decode steps — including for every
+    # quantized backend (the dequant evaluation order is pinned
+    # shape-stable in quant/matmul._pin; XLA used to reassociate the
+    # float epilogue differently per window width)
+    cfg0, params = tiny_lm
+    cfg = _quant(cfg0, backend)
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab, (1, 5)).astype(np.int32)
+    dec = jax.jit(lambda p, t, pos, c: TLM.decode_step(p, t, pos, cfg, c))
+    ver = jax.jit(lambda p, t, pos, c: TLM.verify_step(p, t, pos, cfg, c))
+    cache = TLM.init_cache(cfg, 1, MAX_LEN, jnp.float32)
+    logits, cache = jax.jit(lambda p, t, c: TLM.prefill(p, t, cfg, c))(
+        params, jnp.asarray(prompt), cache)
+    toks = [int(jnp.argmax(logits[0, -1]))]
+    seq_logits, seq_cache, pos = [], cache, 5
+    for _ in range(4):
+        lg, seq_cache = dec(params, jnp.asarray([[toks[-1]]], jnp.int32),
+                            jnp.asarray([pos], jnp.int32), seq_cache)
+        seq_logits.append(np.asarray(lg[0, 0]))
+        toks.append(int(np.argmax(seq_logits[-1])))
+        pos += 1
+    win = jnp.asarray([toks[:4]], jnp.int32)
+    vlg, vcache = ver(params, win, jnp.asarray([5], jnp.int32), cache)
+    for j in range(4):
+        np.testing.assert_array_equal(
+            np.asarray(vlg[0, j]), seq_logits[j],
+            err_msg=f"{backend}: verify row {j} != sequential logits")
+    for a, b in zip(jax.tree.leaves(vcache), jax.tree.leaves(seq_cache)):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"{backend}: verify cache writes != sequential")
+
+
+def test_rollback_positions_erases_exactly_the_suffix(tiny_lm):
+    cfg0, _ = tiny_lm
+    pool = jax.tree.map(
+        lambda x: jnp.ones_like(x),
+        TLM.init_cache(cfg0, 3, 16, jnp.float32))
+    start, stop = np.array([4, 0, 16]), np.array([8, 16, 16])
+    out = TLM.rollback_positions(pool, start, stop)
+    for leaf in jax.tree.leaves(out):
+        arr = np.asarray(leaf)            # (rep, 3, 16, ...)
+        for s in range(3):
+            row = arr[:, s]
+            lo, hi = start[s], stop[s]
+            assert (row[:, lo:hi] == 0).all(), "suffix not erased"
+            assert (row[:, :lo] == 1).all(), "prefix was touched"
+            assert (row[:, hi:] == 1).all(), "tail past stop was touched"
+
+
+# ---------------------------------------------------------------------------
+# the parity matrix: spec serve == sequential serve, bitwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["bf16"] + BACKENDS)
+def test_spec_matches_sequential_per_backend(tiny_lm, backend):
+    # K=4 with an approx_stage1 draft, mixed-length workload with
+    # mid-decode admission (5 requests, 3 slots) and prefix caching on
+    cfg0, params = tiny_lm
+    cfg = _quant(cfg0, backend)
+    seq, seq_stats, _ = _serve(cfg, params, _mixed_reqs(cfg.vocab))
+    spc, stats, _ = _serve(cfg, params, _mixed_reqs(cfg.vocab),
+                           spec=SpecConfig(k=4,
+                                           draft_backend="approx_stage1"))
+    assert seq_stats["waves"] >= 2, "workload lost its mid-decode admission"
+    assert spc == seq, f"{backend}: speculative tokens != sequential"
+    assert stats["spec_passes"] > 0
+    assert stats["spec_committed"] >= stats["spec_passes"]
+    hist = stats["spec_accept_hist"]
+    assert stats["spec_committed"] == sum((a + 1) * n
+                                          for a, n in enumerate(hist)), \
+        "committed != accepted + 1 summed over verify outcomes"
+
+
+@pytest.mark.parametrize("k", [1, 2, 4, 8])
+@pytest.mark.parametrize("backend", ["bf16", "int8_exact"])
+def test_spec_matches_sequential_k_sweep(tiny_lm, backend, k):
+    cfg0, params = tiny_lm
+    cfg = _quant(cfg0, backend)
+    seq, _, _ = _serve(cfg, params, _mixed_reqs(cfg.vocab, seed=5))
+    spc, stats, _ = _serve(cfg, params, _mixed_reqs(cfg.vocab, seed=5),
+                           spec=SpecConfig(k=k,
+                                           draft_backend="approx_stage1"))
+    assert spc == seq, f"{backend} K={k}: speculative != sequential"
+    assert len(stats["spec_accept_hist"]) == k
+
+
+@pytest.mark.parametrize("draft", ["bf16", "approx_stage1",
+                                   "approx_deficit", "int8_exact"])
+def test_spec_matches_sequential_draft_sweep(tiny_lm, draft):
+    # int8_exact target under every draft flavor, including the
+    # self-draft (draft == target backend)
+    cfg0, params = tiny_lm
+    cfg = _quant(cfg0, "int8_exact")
+    seq, _, _ = _serve(cfg, params, _mixed_reqs(cfg.vocab, seed=7))
+    spc, stats, _ = _serve(cfg, params, _mixed_reqs(cfg.vocab, seed=7),
+                           spec=SpecConfig(k=4, draft_backend=draft))
+    assert spc == seq, f"draft={draft}: speculative != sequential"
+
+
+def test_smaller_draft_model_config(tiny_lm):
+    # the other draft flavor: a distinct (smaller) registered config with
+    # its own params — proposals come from a genuinely different model
+    cfg0, params = tiny_lm
+    draft_cfg = registry.reduced("smollm-135m", n_layers=1, d_model=32,
+                                 n_heads=2, n_kv_heads=1, d_ff=64,
+                                 vocab=64, vocab_pad=64, head_dim=16)
+    draft_params = TLM.init(draft_cfg, jax.random.PRNGKey(7))
+    cfg = _quant(cfg0, "int8_exact")
+    seq, _, _ = _serve(cfg, params, _mixed_reqs(cfg.vocab, seed=9))
+    spc, stats, _ = _serve(
+        cfg, params, _mixed_reqs(cfg.vocab, seed=9),
+        spec=SpecConfig(k=4, draft_cfg=draft_cfg),
+        draft_params=draft_params)
+    assert spc == seq, "smaller-draft speculative != sequential"
+    assert stats["spec_passes"] > 0
+
+
+def test_self_draft_reaches_full_acceptance(tiny_lm):
+    # draft == target backend on the same params: proposals are the
+    # target's own greedy tokens (verify rows are bitwise the draft's
+    # decode rows), so every pass commits K tokens until a request
+    # finishes — and the engine takes strictly fewer decode passes
+    cfg0, params = tiny_lm
+    cfg = _quant(cfg0, "int8_exact")
+    req = [ServeRequest(rid=0, prompt=np.arange(4, dtype=np.int32),
+                        max_new=12)]
+    seq, seq_stats, _ = _serve(cfg, params, req, slots=1)
+    req = [ServeRequest(rid=0, prompt=np.arange(4, dtype=np.int32),
+                        max_new=12)]
+    spc, stats, _ = _serve(cfg, params, req, slots=1,
+                           spec=SpecConfig(k=4,
+                                           draft_backend="int8_exact"))
+    assert spc == seq
+    assert stats["decode_steps"] < seq_stats["decode_steps"], \
+        "full-accepting speculation did not reduce decode passes"
+    hist = stats["spec_accept_hist"]
+    # every outcome is a full accept except at most the finishing pass
+    assert sum(hist[:-1]) <= 1, f"self-draft rejected drafts: {hist}"
+
+
+# ---------------------------------------------------------------------------
+# composition: prefix-cache hits, per-request caps, ceiling fallback
+# ---------------------------------------------------------------------------
+
+def _shared_prompts(vocab, seed, suffixes=(4, 3, 5)):
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, vocab, 8).astype(np.int32)
+    return [np.concatenate([shared,
+                            rng.integers(0, vocab, n).astype(np.int32)])
+            for n in suffixes]
+
+
+@pytest.mark.parametrize("backend", ["bf16", "int8_exact",
+                                     "approx_stage1_fused"])
+def test_spec_on_prefix_cache_hit_equals_cold(tiny_lm, backend):
+    # a speculative engine that admits onto published prefix pages must
+    # decode the same tokens as (a) a cold speculative engine and (b) the
+    # sequential engine — the hit==miss contract composed with rollback
+    # (pages are published only up to the committed frontier, so specu-
+    # lative junk can never reach the radix store)
+    cfg0, params = tiny_lm
+    cfg = _quant(cfg0, backend)
+    pa, pb, _ = _shared_prompts(cfg.vocab, seed=21)
+    spec = SpecConfig(k=4, draft_backend="approx_stage1")
+
+    warm = Engine(cfg, params, slots=2, max_len=MAX_LEN, page_size=4,
+                  spec=spec)
+    warm.submit(ServeRequest(rid=0, prompt=pa, max_new=4))
+    warm.run()
+    warm.submit(ServeRequest(rid=1, prompt=pb, max_new=5))
+    warm.run()
+    assert warm.prefix_hit_tokens >= 8, "request B missed the shared prefix"
+    hit = next(r for r in warm.completed if r.rid == 1).output
+
+    cold, _, _ = _serve(cfg, params,
+                        [ServeRequest(rid=1, prompt=pb, max_new=5)],
+                        slots=2, spec=spec, page_size=4)
+    seq, _, _ = _serve(cfg, params,
+                       [ServeRequest(rid=1, prompt=pb, max_new=5)],
+                       slots=2, page_size=4)
+    assert hit == cold[1] == seq[1], (
+        f"{backend}: hit={hit} cold={cold[1]} sequential={seq[1]} — "
+        "speculation broke the prefix-cache invariance")
+
+
+def test_per_request_spec_k_caps_do_not_change_tokens(tiny_lm):
+    cfg0, params = tiny_lm
+    cfg = _quant(cfg0, "int8_exact")
+    seq, _, _ = _serve(cfg, params, _mixed_reqs(cfg.vocab, seed=11))
+    caps = [0, 1, None, 2, 0]
+    reqs = _mixed_reqs(cfg.vocab, seed=11)
+    for r, c in zip(reqs, caps):
+        r.spec_k = c
+    spc, stats, _ = _serve(cfg, params, reqs,
+                           spec=SpecConfig(k=4,
+                                           draft_backend="approx_stage1"))
+    assert spc == seq, "per-request spec_k changed decoded tokens"
+
+
+def test_all_spec_k_zero_runs_sequential_passes(tiny_lm):
+    cfg0, params = tiny_lm
+    cfg = _quant(cfg0, "int8_exact")
+    seq, _, _ = _serve(cfg, params, _mixed_reqs(cfg.vocab, seed=13, n=3))
+    spc, stats, _ = _serve(cfg, params,
+                           _mixed_reqs(cfg.vocab, seed=13, n=3, spec_k=0),
+                           spec=SpecConfig(k=4, draft_backend="bf16"))
+    assert spc == seq
+    assert stats["spec_passes"] == 0, \
+        "engine ran verify passes for a workload that opted out"
+
+
+def test_max_len_ceiling_falls_back_to_sequential_passes(tiny_lm):
+    # prompts long enough that p0 + K would write past the cache — the
+    # engine must serve them through plain width-1 passes (keeping the
+    # draft pool in sync) and still match sequential decode, with the
+    # truncation reported explicitly
+    cfg0, params = tiny_lm
+    cfg = _quant(cfg0, "int8_exact")
+
+    def long_reqs():
+        rng = np.random.default_rng(17)
+        return [ServeRequest(rid=rid,
+                             prompt=rng.integers(0, cfg.vocab, 26 + rid)
+                             .astype(np.int32), max_new=10)
+                for rid in range(2)]
+
+    seq, _, _ = _serve(cfg, params, long_reqs(), slots=2)
+    spc, stats, _ = _serve(cfg, params, long_reqs(), slots=2,
+                           spec=SpecConfig(k=8, draft_backend="bf16"))
+    assert spc == seq
+    assert all(len(t) for t in spc.values())
+    for toks in spc.values():
+        assert len(toks) <= 10
+
+
+def test_spec_requires_position_indexed_caches(tiny_lm):
+    cfg0, params = tiny_lm
+    windowed = dataclasses.replace(cfg0, local_window=8)
+    with pytest.raises(ValueError, match="position-indexed"):
+        Engine(windowed, params, slots=2, max_len=MAX_LEN,
+               spec=SpecConfig(k=4))
+
+
+# ---------------------------------------------------------------------------
+# sampled streams: spec on == spec off (committed-token keying)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scfg", [
+    SamplingConfig(kind="temperature", temperature=1.3, seed=5),
+    SamplingConfig(kind="top_k", top_k=8, temperature=0.9, seed=6),
+])
+def test_sampled_stream_spec_on_equals_off(tiny_lm, scfg):
+    # the satellite regression: sampling keys advance with COMMITTED
+    # tokens, not verify passes — a pass-indexed key would desynchronize
+    # the stream at the first multi-token commit
+    cfg0, params = tiny_lm
+    cfg = _quant(cfg0, "int8_exact")
+    seq, _, _ = _serve(cfg, params,
+                       _mixed_reqs(cfg.vocab, seed=19, sampling=scfg))
+    spc, stats, _ = _serve(cfg, params,
+                           _mixed_reqs(cfg.vocab, seed=19, sampling=scfg),
+                           spec=SpecConfig(k=4, draft_backend="bf16"))
+    assert spc == seq, f"{scfg.kind}: sampled stream diverged under spec"
+    assert stats["spec_passes"] > 0
+
+
+# ---------------------------------------------------------------------------
+# state invariants: rollback, page publication, refcounts
+# ---------------------------------------------------------------------------
+
+def test_pool_row_bitwise_equal_after_speculative_run(tiny_lm):
+    # the KV un-commit invariant, leaf by leaf: after serving one request
+    # on one slot, the speculative pool row must be bitwise identical to
+    # the sequential engine's row — valid KV up to the frontier, zeros
+    # (the init_cache state) past it. Any rejected-position write that
+    # survived rollback shows up here.
+    cfg0, params = tiny_lm
+    cfg = _quant(cfg0, "int8_exact")
+    mk = lambda: [ServeRequest(  # noqa: E731
+        rid=0, prompt=np.arange(5, dtype=np.int32), max_new=9)]
+    _, _, seq_eng = _serve(cfg, params, mk(), slots=1,
+                           prefix_caching=False)
+    _, _, spc_eng = _serve(cfg, params, mk(), slots=1,
+                           prefix_caching=False,
+                           spec=SpecConfig(k=4,
+                                           draft_backend="approx_stage1"))
+    frontier = 5 + 9 - 1                 # plen + committed - 1
+    for a, b in zip(jax.tree.leaves(spc_eng.pool),
+                    jax.tree.leaves(seq_eng.pool)):
+        a, b = np.asarray(a), np.asarray(b)
+        np.testing.assert_array_equal(
+            a, b, err_msg="speculative pool row != sequential pool row")
+        assert (a[:, :, frontier:] == 0).all(), \
+            "speculative KV survived past the committed frontier"
+
+
+def test_published_pages_identical_and_refcounts_conserved(tiny_lm):
+    # pages frozen out of a speculative engine are the pages a sequential
+    # engine publishes (rollback runs before retirement stores), and the
+    # paged-store ledger balances the same way: every radix page holds
+    # exactly the tree's own reference once all requests retired
+    cfg0, params = tiny_lm
+    cfg = _quant(cfg0, "int8_exact")
+    prompts = _shared_prompts(cfg.vocab, seed=23)
+    mk = lambda: [ServeRequest(rid=i, prompt=p, max_new=m)  # noqa: E731
+                  for i, (p, m) in enumerate(zip(prompts, (6, 4, 5)))]
+    _, _, seq_eng = _serve(cfg, params, mk(), slots=2, page_size=4)
+    _, _, spc_eng = _serve(cfg, params, mk(), slots=2, page_size=4,
+                           spec=SpecConfig(k=4,
+                                           draft_backend="approx_stage1"))
+    for eng in (seq_eng, spc_eng):
+        pages = eng.prefix.pages()
+        assert all(eng.prefix.pool.refcount(p) == 1 for p in pages), \
+            "page refcounts did not balance after retirement"
+        assert len(pages) + eng.prefix.pool.n_free == eng.prefix.pool.n_pages
+    assert spc_eng.prefix.n_nodes == seq_eng.prefix.n_nodes
+    sa = sorted(spc_eng.prefix.pages())
+    sb = sorted(seq_eng.prefix.pages())
+    assert sa == sb
+    for a, b in zip(jax.tree.leaves(spc_eng.pages),
+                    jax.tree.leaves(seq_eng.pages)):
+        a, b = np.asarray(a), np.asarray(b)
+        np.testing.assert_array_equal(
+            a[:, sa], b[:, sb],
+            err_msg="published page contents differ under speculation")
+
+
+# ---------------------------------------------------------------------------
+# mesh composition: spec over Engine(mesh=...) == single-device sequential
+# ---------------------------------------------------------------------------
+
+from repro.launch.mesh import make_serving_mesh  # noqa: E402
+
+
+@pytest.fixture(scope="module")
+def serve_mesh():
+    m = make_serving_mesh()
+    if m.devices.size < 2:
+        pytest.skip("sharded speculative parity needs >1 device "
+                    "(conftest forces 8 host devices)")
+    return m
+
+
+@pytest.mark.parametrize("backend", ["bf16"] + BACKENDS)
+def test_sharded_spec_matches_single_device_sequential(tiny_lm, serve_mesh,
+                                                       backend):
+    # the full stack at once: a 2x4 forced-CPU mesh, speculation with an
+    # approx_stage1 draft, mid-decode admission (3 requests, 2 slots) and
+    # a shared 8-token prefix published then hit — tokens must equal the
+    # single-device sequential engine bit for bit
+    cfg0, params = tiny_lm
+    cfg = _quant(cfg0, backend)
+    prompts = _shared_prompts(cfg.vocab, seed=31)
+    mk = lambda: [ServeRequest(rid=rid, prompt=p, max_new=m)  # noqa: E731
+                  for rid, (p, m) in enumerate(zip(prompts, (2, 6, 4)))]
+    ref_eng = Engine(cfg, params, slots=2, max_len=MAX_LEN, page_size=4)
+    for r in mk():
+        ref_eng.submit(r)
+    ref_eng.run()
+    ref = {r.rid: list(r.output) for r in ref_eng.completed}
+
+    eng = Engine(cfg, params, slots=2, max_len=MAX_LEN, page_size=4,
+                 mesh=serve_mesh,
+                 spec=SpecConfig(k=4, draft_backend="approx_stage1"))
+    for r in mk():
+        eng.submit(r)
+    stats = eng.run()
+    out = {r.rid: list(r.output) for r in eng.completed}
+    assert stats["waves"] >= 2, "probe was not admitted mid-decode"
+    assert eng.prefix_hit_tokens >= 8, "probe admission missed the prefix"
+    assert out == ref, (
+        f"{backend}: sharded speculative={out} sequential={ref} — the "
+        "mesh or the verify/rollback pair changed decoded tokens")
+    assert stats["spec_passes"] > 0
+
+
+# ---------------------------------------------------------------------------
+# bookkeeping properties (hypothesis shim / real hypothesis in CI)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 8), st.lists(st.integers(0, 63), min_size=1,
+                                   max_size=8),
+       st.lists(st.integers(0, 63), min_size=1, max_size=9))
+def test_acceptance_bookkeeping_property(k, window, emitted):
+    window = np.asarray((window + [0] * k)[:k], np.int32)
+    emitted = emitted[:k]
+    a = acceptance(window, emitted)
+    assert 0 <= a <= min(len(emitted) - 1, k - 1)
+    # the accepted run is exactly the leading agreement
+    for j in range(a):
+        assert emitted[j] == window[j + 1]
+    if a < len(emitted) - 1 and a + 1 < k:
+        assert emitted[a] != window[a + 1]
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(1, 6), min_size=1, max_size=30))
+def test_spec_metrics_committed_equals_accepted_plus_outcomes(commits):
+    k = max(commits)
+    m = SpecMetrics(k)
+    for c in commits:
+        m.record(drafted=k - 1, committed=c)
+    s = m.summary()
+    outcomes = sum(s["spec_accept_hist"])
+    accepted = sum(a * n for a, n in enumerate(s["spec_accept_hist"]))
+    assert outcomes == len(commits)
+    assert s["spec_committed"] == accepted + outcomes, \
+        "committed != accepted + 1 per outcome"
+    assert s["spec_drafted"] == (k - 1) * len(commits)
+    assert 0 <= s["spec_accept_mean"] <= k - 1
