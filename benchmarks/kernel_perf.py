@@ -41,8 +41,10 @@ from repro.quant.quantize import QuantConfig
 from repro.quant import matmul as QM
 
 # Backends whose work is dense linear algebra — feasible at large shapes.
+# The truncation-family cores qualify: msr4 is a weight decode + one int8
+# dot, drum6 one dot over truncated operands, posneg four masked dots.
 DENSE = ("int8_exact", "approx_stage1", "approx_stage1_fused",
-         "approx_rank1")
+         "approx_rank1", "msr4", "drum6", "posneg")
 # Element-wise emulation: O(M*K*N) deficit/gather work — 512^3 is already
 # seconds on CPU, 1024^3 is excluded ("where feasible").
 EMULATION_MAX = 512

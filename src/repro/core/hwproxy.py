@@ -151,3 +151,90 @@ def multiplier_proxy(compressor: str) -> Dict[str, float]:
     delay = (GATE["AND2"][1] + 2 * comp.delay + 10 * FA.delay)
     return {"area": area, "energy": energy, "delay": delay,
             "pdp": energy * delay}
+
+
+# ---------------------------------------------------------------------------
+# MSR/truncation-family proxies (core/truncation.py backends)
+# ---------------------------------------------------------------------------
+
+# 8-bit leading-one detector: priority chain (inverted higher bits ANDed
+# into each position, OR-encoded). Unit-gate inventory of the classic
+# LOD-8 cell.
+LOD8 = Netlist("LOD8", {"INV": 8, "AND2": 8, "OR2": 7},
+               ("INV", "AND2", "OR2", "OR2", "OR2"))
+
+
+def _mux_bank(n_bits: int, stages: int) -> Dict[str, float]:
+    """Barrel-shifter proxy: `stages` MUX2 levels over an `n_bits` word."""
+    n = n_bits * stages
+    return {"area": n * GATE["MUX2"][0],
+            "energy": 0.5 * n * GATE["MUX2"][2],
+            "delay": stages * GATE["MUX2"][1]}
+
+
+def array_multiplier_proxy(bits_a: int, bits_b: int) -> Dict[str, float]:
+    """Unit-gate metrics for an exact `bits_a` x `bits_b` array
+    multiplier: bits_a*bits_b AND pp generators, (bits_a-1)(bits_b-1) FA
+    + (bits_a-1) HA in the array, ripple critical path of
+    bits_a + bits_b - 2 FAs after the pp AND."""
+    n_fa = (bits_a - 1) * (bits_b - 1)
+    n_ha = bits_a - 1
+    n_and = bits_a * bits_b
+    area = n_fa * FA.area + n_ha * HA.area + n_and * GATE["AND2"][0]
+    energy = (n_fa * FA.energy + n_ha * HA.energy
+              + 0.5 * n_and * GATE["AND2"][2])
+    delay = GATE["AND2"][1] + (bits_a + bits_b - 2) * FA.delay
+    return {"area": area, "energy": energy, "delay": delay,
+            "pdp": energy * delay}
+
+
+def truncation_proxy(kind: str) -> Dict[str, float]:
+    """Unit-gate metrics for one MSR/truncation-family datapath.
+
+    Like `multiplier_proxy`, these recover orderings and relative deltas,
+    not absolute silicon numbers:
+
+      msr4    5x8 array core (5-bit decoded weight x exact activation)
+              plus a 2-stage output barrel shifter over the 13-bit
+              product. MSR detection/encode runs once per weight tensor
+              offline, so it is amortized out of the per-MAC figure.
+      drum6   two LOD8 + 2-stage operand shifters feeding a 6x6 core,
+              plus a 3-stage output shifter restoring the 2*t scale.
+      posneg  LOD/shift on both operands, a 4x4 core for positive product
+              classes and a 6x6 core for negative ones; only one core
+              switches per product (activity-weighted 0.5 each), plus the
+              sign-class select (sign XOR + output mux).
+    """
+    if kind == "msr4":
+        core = array_multiplier_proxy(5, 8)
+        shift = _mux_bank(13, 2)
+        area = core["area"] + shift["area"]
+        energy = core["energy"] + shift["energy"]
+        delay = core["delay"] + shift["delay"]
+    elif kind == "drum6":
+        core = array_multiplier_proxy(6, 6)
+        op = {k: 2 * (getattr(LOD8, k) + _mux_bank(6, 2)[k])
+              for k in ("area", "energy")}
+        out = _mux_bank(12, 3)
+        area = core["area"] + op["area"] + out["area"]
+        energy = core["energy"] + op["energy"] + out["energy"]
+        # the two operand paths run in parallel: one LOD+shift in the path
+        delay = (LOD8.delay + _mux_bank(6, 2)["delay"]
+                 + core["delay"] + out["delay"])
+    elif kind == "posneg":
+        core4 = array_multiplier_proxy(4, 4)
+        core6 = array_multiplier_proxy(6, 6)
+        op = {k: 2 * (getattr(LOD8, k) + _mux_bank(6, 2)[k])
+              for k in ("area", "energy")}
+        sel = {"area": GATE["XOR2"][0] + 12 * GATE["MUX2"][0],
+               "energy": 0.5 * (GATE["XOR2"][2] + 12 * GATE["MUX2"][2]),
+               "delay": GATE["MUX2"][1]}
+        area = core4["area"] + core6["area"] + op["area"] + sel["area"]
+        energy = (0.5 * (core4["energy"] + core6["energy"])
+                  + op["energy"] + sel["energy"])
+        delay = (LOD8.delay + _mux_bank(6, 2)["delay"]
+                 + core6["delay"] + sel["delay"])
+    else:
+        raise KeyError(f"unknown truncation proxy kind {kind!r}")
+    return {"area": area, "energy": energy, "delay": delay,
+            "pdp": energy * delay}

@@ -15,15 +15,27 @@ Families:
   approx_stage1*        the MXU re-approximation (exhaustive table from
                         quant.matmul.stage1_exhaustive_products); executed
                         on exact MXU hardware, so no unit-gate proxy
+  msr4/drum6/posneg     the MSR/truncation family (core/truncation.py
+                        gate tables). These schemes are defined on SIGNED
+                        operands (sign-run detection, sign-classed
+                        truncation), so their ER/NMED/MRED are exhaustive
+                        over the signed operand domain [-127, 127]^2 the
+                        quantizer emits, with NMED normalized by 127^2
+                        (metrics.evaluate_signed) — noted in the docs
+                        tables. Hardware proxies are truncated-core unit-
+                        gate estimates (hwproxy.truncation_proxy).
 """
 from __future__ import annotations
 
 from functools import lru_cache
 from typing import Dict, Optional
 
+import numpy as np
+
 from repro.core import hwproxy as HW
 from repro.core import metrics as X
 from repro.core import multiplier as M
+from repro.core import truncation as T
 from repro.quant import matmul as QM
 
 # Family roots: the backends whose exhaustive product table is known
@@ -35,7 +47,13 @@ _ROOT_FAMILY = {
     "int8_exact": "exact",
     "approx_lut": "paper",
     "approx_stage1": "stage1",
+    "msr4_lut": "msr4",
+    "drum6_lut": "drum6",
+    "posneg_lut": "posneg",
 }
+
+# families whose exhaustive table lives in core.truncation (signed domain)
+_TRUNCATION_FAMILIES = ("msr4", "drum6", "posneg")
 
 
 def _family(backend: str) -> Optional[str]:
@@ -65,6 +83,13 @@ def _metrics(family: str, mult: str) -> Optional[X.ErrorMetrics]:
             M.exhaustive_products(M.proposed_multiplier(mult)), exact)
     if family == "stage1":
         return X.evaluate(QM.stage1_exhaustive_products(), exact)
+    if family in _TRUNCATION_FAMILIES:
+        # exhaustive over the signed operand domain the quantizer emits:
+        # [-127, 127]^2 (index 128, the -128 byte, never occurs post-clip)
+        keep = np.arange(256) != 128
+        sel = np.ix_(keep, keep)
+        return X.evaluate_signed(T.product_table(family).astype(np.int64)[sel],
+                                 X.exhaustive_exact_signed()[sel])
     return None
 
 
@@ -91,8 +116,16 @@ def correction_cost(backend: str, multiplier: str):
         info = QM.rank1_info(multiplier)
         per_term = info["digits"] if backend.endswith("_pallas") else 1
         return info["R"], 1.0 + per_term * info["R"]
-    if _family(backend) == "paper":      # element-wise emulation of the
+    fam = _family(backend)
+    if fam == "paper":                   # element-wise emulation of the
         return QM.rank1_info(multiplier)["R"], None   # same error table
+    if fam in _TRUNCATION_FAMILIES:
+        # no correction terms: the approximation is executed directly as
+        # dense dots (decode + 1 dot / truncate + 1 dot / 4 masked dots);
+        # the *_lut gate references are gather-bound, not MAC-shaped
+        if backend.endswith("_lut"):
+            return None, None
+        return None, {"msr4": 1.0, "drum6": 1.0, "posneg": 4.0}[fam]
     return None, None
 
 
@@ -122,6 +155,8 @@ def backend_profile(backend: str, multiplier: str = "proposed") -> Dict:
         hwm = HW.multiplier_proxy("exact")
     elif family == "paper":
         hwm = HW.multiplier_proxy(multiplier)
+    elif family in _TRUNCATION_FAMILIES:
+        hwm = HW.truncation_proxy(family)
     else:
         hwm = None
     if hwm is not None:

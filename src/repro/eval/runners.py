@@ -160,6 +160,13 @@ _PROFILE_COLS: Tuple[Column, ...] = (
     ("proxy_pdp", "proxy PDP (u)", ".1f"),
 )
 
+# appended to every task-table note that carries _PROFILE_COLS
+_PROFILE_NOTE = (
+    " msr4/drum6/posneg rows: ER/NMED/MRED exhaustive over the signed "
+    "operand domain [-127, 127]² with NMED normalized by 127² "
+    "(eval/profiles.py); compressor-family rows use the unsigned 8×8 "
+    "domain normalized by 255² (paper convention).")
+
 
 @dataclasses.dataclass(frozen=True)
 class TableSpec:
@@ -233,7 +240,8 @@ SUITES: Dict[str, Suite] = {
              ("noisy_psnr", "noisy PSNR", ".2f")) + _PROFILE_COLS,
             "Synthetic textures stand in for the paper's image set "
             "(offline container); the exact-vs-approx delta is the claim. "
-            "SSIM is the standard Gaussian-window formulation.")},
+            "SSIM is the standard Gaussian-window formulation."
+            + _PROFILE_NOTE)},
         doc="FFDNet denoising PSNR/SSIM backend sweep"),
     "mnist": Suite(
         "mnist", run_mnist,
@@ -244,7 +252,7 @@ SUITES: Dict[str, Suite] = {
             + _PROFILE_COLS,
             "Synthetic digits stand in for MNIST (offline container). "
             "Paper Table 5 (LeNet-5 on MNIST): exact 98.24, proposed "
-            "96.45, design [13] 91.66.")},
+            "96.45, design [13] 91.66." + _PROFILE_NOTE)},
         doc="LeNet-5 classification accuracy backend sweep"),
     "lm": Suite(
         "lm", run_lm,
@@ -259,7 +267,7 @@ SUITES: Dict[str, Suite] = {
             "head — through the selected backend with per-token activation "
             "scales (prefill/decode bit parity; see docs/quantization.md). "
             "Logit NMED is mean |Δlogit| / max |logit_bf16| vs the bf16 "
-            "reference.")},
+            "reference." + _PROFILE_NOTE)},
         doc="decoder-LM perplexity/logit-NMED backend sweep"),
     "serve": Suite(
         "serve", run_serve,

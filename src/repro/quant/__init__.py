@@ -1,7 +1,8 @@
 from repro.quant.quantize import (QuantConfig, BF16, INT8, APPROX_LUT,
                                   APPROX_DEFICIT, APPROX_STAGE1,
                                   APPROX_DEFICIT_PALLAS,
-                                  APPROX_STAGE1_PALLAS, fake_quant,
+                                  APPROX_STAGE1_PALLAS, MSR4, DRUM6,
+                                  POSNEG, fake_quant,
                                   fake_quant_per_channel, quantize,
                                   quantize_dynamic, abs_max_scale)
 from repro.quant.matmul import (quantized_matmul, integer_matmul,

@@ -27,6 +27,16 @@ where P is the (possibly approximate) signed product of two int8 values in
                         int8 digit-plane correction dots on the
                         accumulator tile (bit-identical to approx_lut);
                         fused epilogue likewise
+  msr4_lut / msr4       MSR-4 weight compression (core/truncation.py):
+                        weights decode to 5-bit mantissa << 2-bit shift,
+                        activations stay exact. `_lut` is the gate-level
+                        gather reference; `msr4` is decode + 1 int8 dot.
+  drum6_lut / drum6     DRUM-style dynamic truncation to 6 significant
+                        bits per operand with forced-one debias; core is
+                        one dot over truncated operands.
+  posneg_lut / posneg   Positive/Negative asymmetric floor truncation
+                        (Spantidi et al.): k=4 for positive product
+                        classes, k=6 for negative; core is 4 masked dots.
 
 New backends are added with `register_backend(name, fn)` — per-layer
 selection then works everywhere `QuantConfig.backend` is consumed (dense,
@@ -360,12 +370,20 @@ def register_backend(name: str, fn: Callable, *, grad: str = "ste",
     """Register an integer-matmul backend under `name`.
 
     The entry becomes selectable per layer via `QuantConfig(backend=name)`
-    and is enumerated by `list_backends()` (parity tests, benchmarks)."""
+    and is enumerated by `list_backends()` (parity tests, benchmarks).
+
+    `oracle` must name an already-registered backend: a dangling oracle
+    reference would otherwise only surface deep inside a parity sweep or
+    a profile-family walk, far from the registration that caused it."""
     if grad != "ste":
         raise ValueError(f"unknown grad rule {grad!r}; only 'ste' is defined")
     if name in _REGISTRY and not overwrite:
         raise ValueError(f"backend {name!r} already registered "
                          "(pass overwrite=True to replace)")
+    if oracle is not None and oracle not in _REGISTRY:
+        raise ValueError(f"backend {name!r} declares unknown oracle "
+                         f"{oracle!r}; register the oracle first "
+                         f"(registered: {list_backends()})")
     be = Backend(name=name, fn=fn, grad=grad, fused=fused, oracle=oracle,
                  note=note)
     _REGISTRY[name] = be
@@ -467,6 +485,55 @@ register_backend("approx_rank1_pallas", _rank1_pallas,
                  fused=_rank1_pallas_fused, oracle="approx_lut",
                  note="Pallas rank-factored kernel (int8 digit-plane "
                       "correction dots) + fused epilogue")
+
+
+# ---------------------------------------------------------------------------
+# MSR/truncation family (core/truncation.py gate references +
+# quant/truncated.py vectorized cores)
+# ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=8)
+def _trunc_err_device(kind: str) -> jax.Array:
+    """Device-staged flattened signed error table for one truncation-family
+    member (same gather layout as `_err_lut_device`)."""
+    from repro.core import truncation
+    with jax.ensure_compile_time_eval():
+        return jnp.asarray(truncation.error_table(kind))
+
+
+def _trunc_lut_matmul(kind: str):
+    """Gate-level gather reference for a truncation-family member: exact
+    int8 dot plus the exhaustive signed error table — the family's oracle,
+    bit-identical to `core.truncation.product_table(kind)` by
+    construction."""
+    def fn(x_q, w_q, cfg: QuantConfig) -> jax.Array:
+        return (int8_matmul(x_q, w_q)
+                + _approx_error_lut(x_q, w_q, _trunc_err_device(kind)))
+    fn.__name__ = f"{kind}_lut_matmul"
+    return fn
+
+
+from repro.quant import truncated as _truncated  # noqa: E402  (cores only;
+# truncated.py does not import this module, so the import is acyclic)
+
+register_backend("msr4_lut", _trunc_lut_matmul("msr4"),
+                 note="MSR-4 weight-compression gate reference "
+                      "(signed-LUT gather)")
+register_backend("msr4", _truncated.msr4_matmul, oracle="msr4_lut",
+                 note="MSR-4 5-bit mantissa+shift weight decode + one "
+                      "exact int8 dot (weight-only approximation)")
+register_backend("drum6_lut", _trunc_lut_matmul("drum6"),
+                 note="DRUM-6 dynamic-truncation gate reference "
+                      "(signed-LUT gather)")
+register_backend("drum6", _truncated.drum6_matmul, oracle="drum6_lut",
+                 note="DRUM-6: one dot over operands truncated to 6 "
+                      "significant bits with forced-one debias")
+register_backend("posneg_lut", _trunc_lut_matmul("posneg"),
+                 note="Positive/Negative asymmetric-truncation gate "
+                      "reference (signed-LUT gather)")
+register_backend("posneg", _truncated.posneg_matmul, oracle="posneg_lut",
+                 note="sign-classed floor truncation (k=4 positive / "
+                      "k=6 negative product classes) as 4 masked dots")
 
 
 def _resolve_backend(cfg: QuantConfig) -> Backend:

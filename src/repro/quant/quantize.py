@@ -38,6 +38,17 @@ class QuantConfig:
       'approx_stage1_pallas'  Pallas stage-1 kernel, fused epilogue
       'approx_rank1_pallas'   Pallas rank-factored kernel (int8 digit-plane
                               correction dots), fused epilogue
+      'msr4[_lut]'            MSR-4 weight compression: weights decode to a
+                              5-bit mantissa << 2-bit shift, activations
+                              exact (core/truncation.py; '_lut' = the gate
+                              reference, 'msr4' = decode + one int8 dot)
+      'drum6[_lut]'           DRUM-style dynamic truncation of both
+                              operands to 6 significant bits with
+                              forced-one (unbiased) rounding
+      'posneg[_lut]'          Positive/Negative asymmetric truncation:
+                              positive product classes floor to 4
+                              significant bits, negative to 6, so signed
+                              errors cancel in the accumulator
 
     fuse_epilogue: let backends with an in-kernel epilogue run dequant,
     bias add and activation fused (set False to force the unfused
@@ -91,6 +102,9 @@ APPROX_RANK1 = QuantConfig(backend="approx_rank1")
 APPROX_DEFICIT_PALLAS = QuantConfig(backend="approx_deficit_pallas")
 APPROX_STAGE1_PALLAS = QuantConfig(backend="approx_stage1_pallas")
 APPROX_RANK1_PALLAS = QuantConfig(backend="approx_rank1_pallas")
+MSR4 = QuantConfig(backend="msr4")
+DRUM6 = QuantConfig(backend="drum6")
+POSNEG = QuantConfig(backend="posneg")
 
 
 def abs_max_scale(x: jax.Array, axis=None, keepdims=True) -> jax.Array:

@@ -1,0 +1,114 @@
+"""Vectorized jnp cores for the MSR/truncation backend family.
+
+Each function implements the ``(x_q (M,K) int8, w_q (K,N) int8, cfg) ->
+(M,N) int32`` registry contract of `repro.quant.matmul` and is proven
+bit-identical to its gate-level reference table
+(`repro.core.truncation.product_table`) over the full 2^16 signed-pair
+domain in tests/test_truncation.py. Unlike the LUT emulation backends
+these cores never materialize an (M, K, N) intermediate — every one is a
+small number of dense contractions over operand-wise transforms:
+
+  msr4_matmul     decode weights to mantissa << shift (still int8), then
+                  ONE exact int8 dot — the weight-only scheme costs a
+                  K*N element-wise decode and nothing else.
+  drum6_matmul    truncate both operands to 6 significant bits with the
+                  forced-one debias, then one dot. Truncated magnitudes
+                  fit 7 bits for quantizer outputs (|v| <= 127); the
+                  int16 operand dtype only exists to carry the
+                  drum(128) = 132 edge of the full oracle domain.
+  posneg_matmul   four masked dots: the positive product classes
+                  (a>0,b>0) + (a<0,b<0) on 4-bit floored magnitudes
+                  minus the negative classes (a>0,b<0) + (a<0,b>0)
+                  on 6-bit floored magnitudes.
+
+This module deliberately does not import `repro.quant.matmul` (it is
+imported *by* it at registration time); the dot helper is local.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.truncation import (DRUM_K, MSR_MANT_MAX, MSR_MANT_MIN,
+                                   POSNEG_K_NEG, POSNEG_K_POS)
+
+
+def _dot_i32(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jax.lax.dot_general(
+        a, b, (((a.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+
+def msr4_decode_weights(w_q: jax.Array) -> jax.Array:
+    """int8 -> int8 decoded weights (mantissa << shift), the jnp twin of
+    `core.truncation.msr4_decode_value`. Decoded values stay in
+    [-128, 120], so the result is still an int8 tensor and the matmul
+    below is the stock MXU int8 dot."""
+    v = w_q.astype(jnp.int32)
+    u = v & 0xFF
+    # sign-replicated XOR: leading zeros of t == MSR run length
+    t = u ^ (((u >> 7) & 1) * 0xFF)
+    # shift s = max(0, 4 - run) == number of thresholds 16/32/64 t clears
+    s = ((t >= 16).astype(jnp.int32) + (t >= 32).astype(jnp.int32)
+         + (t >= 64).astype(jnp.int32))
+    half = (1 << s) >> 1                       # 0 when s == 0
+    m = jnp.clip((v + half) >> s, MSR_MANT_MIN, MSR_MANT_MAX)
+    return (m << s).astype(jnp.int8)
+
+
+def msr4_matmul(x_q, w_q, cfg) -> jax.Array:
+    """Exact activations x MSR-4 decoded weights: one int8 dot."""
+    return _dot_i32(x_q, msr4_decode_weights(w_q))
+
+
+def _trunc_shift(mag: jax.Array, k: int) -> jax.Array:
+    """t = max(0, leading_one_pos - (k-1)) for 8-bit magnitudes, as a sum
+    of threshold comparisons (mag >= 2^j  <=>  leading_one_pos >= j)."""
+    return sum(((mag >> j) > 0).astype(jnp.int32) for j in range(k, 8))
+
+
+def drum_truncate_ops(x: jax.Array, k: int = DRUM_K) -> jax.Array:
+    """Sign-preserving DRUM operand truncation: sign * ((|x|>>t)|1)<<t
+    with t from the leading-one position, exact below 2^k. int16 out
+    (drum(128) = 132 exceeds int8 on the oracle's -128 edge)."""
+    v = x.astype(jnp.int32)
+    mag = jnp.abs(v)
+    t = _trunc_shift(mag, k)
+    kept = ((mag >> t) | 1) << t
+    out = jnp.where(mag >= (1 << k), kept, mag)
+    return (jnp.sign(v) * out).astype(jnp.int16)
+
+
+def drum6_matmul(x_q, w_q, cfg) -> jax.Array:
+    """One dot over DRUM-truncated operands: P factors through the
+    operands, so sign(a)d(|a|) . sign(b)d(|b|) is exactly the signed
+    approximate product summed over K."""
+    return _dot_i32(drum_truncate_ops(x_q), drum_truncate_ops(w_q))
+
+
+def _floor_trunc(mag: jax.Array, k: int) -> jax.Array:
+    t = _trunc_shift(mag, k)
+    return (mag >> t) << t
+
+
+def posneg_matmul(x_q, w_q, cfg) -> jax.Array:
+    """Sign-classed asymmetric truncation as four masked dots.
+
+    Positive product classes (++ and --) use k=4 floors, negative
+    classes (+- and -+) use k=6 floors; zero operands vanish from every
+    mask so zero products contribute exactly 0."""
+    xv = x_q.astype(jnp.int32)
+    wv = w_q.astype(jnp.int32)
+    xmag = jnp.abs(xv)
+    wmag = jnp.abs(wv)
+    xp = (xv > 0).astype(jnp.int32)
+    xn = (xv < 0).astype(jnp.int32)
+    wp = (wv > 0).astype(jnp.int32)
+    wn = (wv < 0).astype(jnp.int32)
+    x4 = _floor_trunc(xmag, POSNEG_K_POS)
+    w4 = _floor_trunc(wmag, POSNEG_K_POS)
+    x6 = _floor_trunc(xmag, POSNEG_K_NEG)
+    w6 = _floor_trunc(wmag, POSNEG_K_NEG)
+    pos = _dot_i32(x4 * xp, w4 * wp) + _dot_i32(x4 * xn, w4 * wn)
+    neg = _dot_i32(x6 * xp, w6 * wn) + _dot_i32(x6 * xn, w6 * wp)
+    return pos - neg

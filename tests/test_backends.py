@@ -44,12 +44,22 @@ def test_registry_shape():
     assert len(names) == len(set(names))
     for must in ("int8_exact", "approx_lut", "approx_deficit",
                  "approx_stage1", "approx_deficit_pallas",
-                 "approx_stage1_pallas"):
+                 "approx_stage1_pallas", "msr4_lut", "msr4", "drum6_lut",
+                 "drum6", "posneg_lut", "posneg"):
         assert must in names
     with pytest.raises(KeyError, match="unknown quant backend"):
         QM.get_backend("no_such_backend")
     with pytest.raises(ValueError, match="already registered"):
         QM.register_backend("int8_exact", lambda x, w, c: None)
+    with pytest.raises(ValueError, match="unknown oracle"):
+        QM.register_backend("dangling_oracle_entry", lambda x, w, c: None,
+                            oracle="no_such_backend")
+    assert "dangling_oracle_entry" not in QM.list_backends()
+    # every declared oracle resolves (register_backend enforces this at
+    # registration; re-check the live registry end to end)
+    for name in names:
+        oracle = QM.get_backend(name).oracle
+        assert oracle is None or oracle in names
 
 
 # -- (a) pre-dequant bit-identity vs the registered oracle ------------------

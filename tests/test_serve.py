@@ -85,6 +85,37 @@ def _serve(cfg, params, reqs, *, slots=4, policy="continuous",
 
 
 # ---------------------------------------------------------------------------
+# Parity-matrix coverage: a registered backend must never ship unswept
+# ---------------------------------------------------------------------------
+
+def test_parity_matrix_covers_registry():
+    """The token-parity sweeps below parametrize over BACKENDS, captured
+    from `list_backends()` at import. Fails if the sweep list is ever
+    frozen to a literal or a backend registers after collection — the
+    regression that would let a backend skip batching-invariance and
+    sharded-engine parity."""
+    assert BACKENDS == list(QM.list_backends())
+    for member in ("msr4", "drum6", "posneg"):   # the truncation family
+        assert member in BACKENDS
+
+
+def test_committed_serve_artifact_covers_registry():
+    """experiments/eval/serve.json must carry a row for every registered
+    backend (plus bf16): registering a backend without regenerating the
+    serve artifact would silently drop it from the published parity
+    table."""
+    import json
+    from pathlib import Path
+    art = Path(__file__).resolve().parents[1] / "experiments/eval/serve.json"
+    rows = json.loads(art.read_text())["tables"]["serve"]
+    labels = {r["backend"] for r in rows}
+    missing = ({"bf16", *QM.list_backends()}) - labels
+    assert not missing, (f"serve artifact missing backends {sorted(missing)}"
+                         " — regenerate with `python -m repro.eval run "
+                         "--suite serve --smoke`")
+
+
+# ---------------------------------------------------------------------------
 # serve_loop regression: right-padding bug + finish reasons
 # ---------------------------------------------------------------------------
 

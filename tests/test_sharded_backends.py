@@ -77,6 +77,17 @@ def _quantized(x, w):
 # Per-backend bitwise parity: float wrapper and integer core
 # ---------------------------------------------------------------------------
 
+def test_parity_matrix_covers_registry():
+    """Every registered backend must appear in this module's parametrized
+    parity matrix. BACKENDS is captured from `list_backends()` at import,
+    so this only fails if the sweep list is ever frozen to a literal (or a
+    backend registers after test collection) — exactly the regression that
+    would let a new backend ship without sharded-parity coverage."""
+    assert BACKENDS == list(QM.list_backends())
+    for member in ("msr4", "drum6", "posneg"):   # the truncation family
+        assert member in BACKENDS
+
+
 @pytest.mark.parametrize("backend", BACKENDS)
 def test_float_parity_all_axis_assignments(mesh, backend):
     x, w, b = _operands()
